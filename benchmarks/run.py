@@ -1,0 +1,47 @@
+"""Benchmark harness — one module per paper table/figure (+ beyond-paper).
+Prints ``name,us_per_call,derived`` CSV rows. See EXPERIMENTS.md for the
+mapping to the paper's tables."""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names (approx_ratio, scaling, "
+                         "breakdown, pivot, moe_router, kernels)")
+    ap.add_argument("--full", action="store_true",
+                    help="larger problem sizes (slower)")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_approx_ratio, bench_breakdown, bench_kernels, bench_moe_router,
+        bench_pivot, bench_scaling,
+    )
+
+    benches = {
+        "approx_ratio": lambda: bench_approx_ratio.run(
+            n_matrices=100 if args.full else 50, n=120 if args.full else 96),
+        "scaling": bench_scaling.run,
+        "breakdown": bench_breakdown.run,
+        "pivot": bench_pivot.run,
+        "moe_router": bench_moe_router.run,
+        "kernels": bench_kernels.run,
+    }
+    selected = (args.only.split(",") if args.only else list(benches))
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            benches[name]()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""The paper's motivating application end-to-end (§6.6): static pivoting for
+a pivot-free sparse LU solve.
+
+Builds an ill-conditioned system (tiny diagonal, heavy hidden permutation),
+equilibrates, computes an AWPM row permutation on the log-weights (MC64
+option-5 analogue), factorizes WITHOUT pivoting, and compares the solution
+error against (a) no pre-pivoting and (b) the exact MWPM permutation.
+
+  PYTHONPATH=src python examples/static_pivoting_solver.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import graph, pivot, ref, single
+
+
+def main(n=120, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(n, n)) * (rng.random((n, n)) < 0.15)
+    hidden = rng.permutation(n)
+    a[hidden, np.arange(n)] = rng.uniform(5, 10, n) * rng.choice([-1, 1], n)
+    np.fill_diagonal(a, rng.uniform(0, 1e-9, n))
+    x_true = np.ones(n)
+    b = a @ x_true
+    print(f"system: n={n}, nnz={int((a != 0).sum())}, diagonal ~1e-9")
+
+    a_s, _, _ = pivot.equilibrate(a)
+    rr, cc = np.nonzero(a_s)
+    g = graph.from_coo(rr.astype(np.int32), cc.astype(np.int32),
+                       np.abs(a_s[rr, cc]).astype(np.float32), n)
+    glog = pivot.log_transformed(g)
+    st, iters = single.awpm(jnp.asarray(glog.row), jnp.asarray(glog.col),
+                            jnp.asarray(glog.val), n)
+    mr = np.array(st.mate_row[:n])
+    print(f"AWPM (product metric): perfect matching in {int(iters)} AWAC rounds")
+
+    for name, perm in [("no pivoting", np.arange(n)), ("AWPM", mr)]:
+        try:
+            x = pivot.static_pivot_solve(a, b, perm)
+            err = pivot.relative_error(x, x_true)
+            print(f"  {name:12s}: relative error {err:.3e}")
+        except ZeroDivisionError:
+            print(f"  {name:12s}: LU FAILED (zero pivot)")
+
+    dense_log = np.where(g.structure_dense(),
+                         np.log(np.maximum(np.abs(g.to_dense()), 1e-30)),
+                         0.0).astype(np.float32)
+    mr_x, _ = ref.exact_mwpm(dense_log, g.structure_dense())
+    x = pivot.static_pivot_solve(a, b, mr_x)
+    print(f"  {'exact MWPM':12s}: relative error "
+          f"{pivot.relative_error(x, x_true):.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""The paper's own 'architecture': distributed AWPM matching itself, as a
+dry-runnable + roofline-analyzable config (beyond the 10 assigned archs)."""
+from repro.configs.base import MatchingConfig
+
+
+def config():
+    return MatchingConfig("awpm-matching", n=4_194_304, avg_degree=16)
+
+
+def reduced():
+    return MatchingConfig("awpm-matching-smoke", n=128, avg_degree=5)

@@ -1,0 +1,466 @@
+"""Distributed-memory AWPM via shard_map over a 2D(+pod) device grid.
+
+The paper's √p x √p process grid maps onto the production mesh:
+grid row  a  = flattened index over ``row_axes``   (e.g. ("pod", "data")),
+grid col  b  = index over ``col_axis``             ("model").
+
+O(m) edge state is strictly 2D-block-sharded ([Pr, Pc, cap] stacked blocks,
+global indices, lex-sorted per block). O(n) matching state (mates, u, v,
+winners) is replicated and updated identically on every device, so steps C/D
+need only all_gathers and the augmentation broadcast of the paper (Alg. 6)
+disappears entirely (DESIGN.md §2).
+
+Communication per AWAC round (paper Steps A-D):
+  A/B: two bucketed fixed-capacity ``all_to_all``s (first along the column
+       axis, then along the row axes) carrying relabeled completion edges
+       (i', j') = (mate_row[c], mate_col[r]) — the nonzeros of M Aᵀ M.
+  C:   all_gather of per-local-column winners along ``row_axes``.
+  D:   all_gather along ``col_axis`` to replicate the winner arrays, then the
+       replicated `select_and_augment` from repro.core.single (shared code).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import single
+from repro.core.single import MatchState, NEG, MIN_GAIN
+from repro.sparse.ops import lex_searchsorted, segment_argmax_tie, segment_max_with_payload
+from repro.sparse.partition import partition_coo_2d
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    """Static description of the process grid embedded in the mesh."""
+
+    mesh: jax.sharding.Mesh
+    row_axes: tuple[str, ...] = ("data",)
+    col_axis: str = "model"
+
+    @property
+    def pr(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.row_axes]))
+
+    @property
+    def pc(self) -> int:
+        return int(self.mesh.shape[self.col_axis])
+
+    def block_spec(self) -> P:
+        ra = self.row_axes[0] if len(self.row_axes) == 1 else self.row_axes
+        return P(ra, self.col_axis, None)
+
+
+def _int_fill(n):
+    return jnp.int32(n)
+
+
+def _search_depth(cap: int) -> int:
+    return max(1, math.ceil(math.log2(max(cap, 2))) + 1)
+
+
+def a2a_bucketed(arrays, fills, dest, valid, n_peers: int, cap_out: int,
+                 axis_name, packed: bool = False):
+    """Fixed-capacity bucketed all_to_all (the MPI_Alltoallv replacement).
+
+    arrays: list of 1D [L] arrays; fills: per-array padding value.
+    dest [L] in [0, n_peers); valid [L] bool. Entries beyond ``cap_out`` per
+    destination bucket are dropped (counted in ``dropped`` — the caller
+    retries them implicitly on the next AWAC iteration).
+
+    ``packed=True`` (§Perf iteration M1) bitcasts all payloads into ONE
+    [n_peers, cap_out, k] int32 all_to_all instead of k+1 separate
+    collectives, and derives validity from the first array's fill sentinel —
+    the validity exchange disappears entirely.
+
+    Returns (out_arrays list of [n_peers*cap_out], out_valid, dropped).
+    """
+    L = dest.shape[0]
+    d = jnp.where(valid, dest, n_peers)
+    order = jnp.argsort(d, stable=True)
+    ds = d[order]
+    start = jnp.searchsorted(ds, jnp.arange(n_peers, dtype=ds.dtype))
+    posin = jnp.arange(L, dtype=jnp.int32) - start[jnp.clip(ds, 0, n_peers - 1)].astype(jnp.int32)
+    ok = (ds < n_peers) & (posin < cap_out)
+    slot = jnp.where(ok, ds.astype(jnp.int32) * cap_out + posin, n_peers * cap_out)
+    dropped = (ds < n_peers).sum() - ok.sum()
+
+    def fill_buf(a, fv):
+        buf = jnp.full((n_peers * cap_out + 1,), fv, a.dtype)
+        return buf.at[slot].set(a[order])[:-1]
+
+    if packed:
+        cols = []
+        for a, fv in zip(arrays, fills):
+            b = fill_buf(a, fv)
+            if b.dtype != jnp.int32:
+                b = jax.lax.bitcast_convert_type(b, jnp.int32)
+            cols.append(b)
+        payload = jnp.stack(cols, axis=-1).reshape(n_peers, cap_out, len(cols))
+        recv = jax.lax.all_to_all(payload, axis_name, 0, 0)
+        recv = recv.reshape(-1, len(cols))
+        outs = []
+        for i, (a, fv) in enumerate(zip(arrays, fills)):
+            col = recv[:, i]
+            if a.dtype != jnp.int32:
+                col = jax.lax.bitcast_convert_type(col, a.dtype)
+            outs.append(col)
+        # validity from the first array's sentinel (mate ids use fill = n)
+        vrecv = outs[0] != fills[0]
+        return outs, vrecv, dropped
+
+    outs = []
+    for a, fv in zip(arrays, fills):
+        buf = fill_buf(a, fv).reshape(n_peers, cap_out)
+        outs.append(jax.lax.all_to_all(buf, axis_name, 0, 0).reshape(-1))
+    vbuf = jnp.zeros((n_peers * cap_out + 1,), jnp.int8).at[slot].set(
+        ok.astype(jnp.int8))
+    vrecv = jax.lax.all_to_all(vbuf[:-1].reshape(n_peers, cap_out),
+                               axis_name, 0, 0)
+    return outs, vrecv.reshape(-1).astype(bool), dropped
+
+
+def _lex_pick(G, TIE, payloads, tie_fill):
+    """Pick per-column (max G, tie -> min TIE) across leading device axis.
+
+    G [D, k] float, TIE [D, k] int. Returns (g [k], tie [k], picked payloads).
+    Empty columns (all -inf) return (-inf, tie_fill, payload rows from dev 0).
+    """
+    g0 = G.max(axis=0)
+    hit = (G == g0[None, :]) & (g0[None, :] > NEG)
+    tie_m = jnp.where(hit, TIE, tie_fill)
+    t0 = tie_m.min(axis=0)
+    hit2 = hit & (TIE == t0[None, :])
+    dev = jnp.argmax(hit2, axis=0)
+    out = [jnp.take_along_axis(p, dev[None, :], axis=0)[0] for p in payloads]
+    return g0, t0, out
+
+
+def make_dist_awac(spec: GridSpec, n: int, cap: int, a2a_caps: tuple[int, int],
+                   max_iter: int = 1000, min_gain: float = MIN_GAIN,
+                   packed: bool = False):
+    """Build the jitted distributed AWAC. Inputs: blocks [Pr, Pc, cap] (row,
+    col, val) + replicated MatchState. Returns (state, iters, dropped)."""
+    pr, pc = spec.pr, spec.pc
+    br = -(-n // pr)
+    bc = -(-n // pc)
+    cap1, cap2 = a2a_caps
+    row_axes = spec.row_axes if len(spec.row_axes) > 1 else spec.row_axes[0]
+    col_axis = spec.col_axis
+    all_axes = tuple(spec.row_axes) + (spec.col_axis,)
+
+    def block_fn(brow, bcol, bval, mate_row, mate_col, u, v):
+        brow = brow.reshape(-1)
+        bcol = bcol.reshape(-1)
+        bval = bval.reshape(-1)
+        b = jax.lax.axis_index(col_axis)
+
+        def round_body(carry):
+            state, it, _, drop_acc = carry
+            mate_row, mate_col, u, v = state
+            # ---- Steps A/B: relabel local nonzeros to completion-edge slots
+            i2 = mate_row[bcol]
+            j2 = mate_col[brow]
+            valid = (brow < n) & (i2 < n) & (j2 < n)
+            # stage 1: route to owning grid column (by j2)
+            (o_i, o_j, o_w), v1, d1 = a2a_bucketed(
+                [i2, j2, bval], [_int_fill(n), _int_fill(n), jnp.float32(0)],
+                j2 // bc, valid, pc, cap1, col_axis, packed=packed,
+            )
+            # stage 2: route to owning grid row (by i2)
+            (qi, qj, qw2), qvalid, d2 = a2a_bucketed(
+                [o_i, o_j, o_w], [_int_fill(n), _int_fill(n), jnp.float32(0)],
+                o_i // br, v1, pr, cap2, row_axes, packed=packed,
+            )
+            # ---- local join: does candidate edge (qi, qj) exist in my block?
+            # (§Perf M2: search depth ceil(log2(cap)) instead of fixed 32)
+            pos, found = lex_searchsorted(brow, bcol, qi, qj,
+                                          n_steps=_search_depth(cap))
+            w1 = bval[jnp.clip(pos, 0, brow.shape[0] - 1)]
+            gain = w1 + qw2 - u[qi] - v[qj]
+            cand = qvalid & found & (qi > mate_row[qj]) & (gain > min_gain)
+            # ---- Step C: per-local-column winner (max gain, tie min row)
+            lj = jnp.where(cand, qj - b * bc, bc).astype(jnp.int32)
+            gm = jnp.where(cand, gain, NEG)
+            Cg, Cidx = segment_argmax_tie(gm, qi, lj, bc + 1)
+            selc = jnp.clip(Cidx[:bc], 0)
+            has = Cidx[:bc] >= 0
+            cg_loc = Cg[:bc]
+            ci_loc = jnp.where(has, qi[selc], n).astype(jnp.int32)
+            w1_loc = jnp.where(has, w1[selc], 0.0)
+            w2_loc = jnp.where(has, qw2[selc], 0.0)
+            # combine across grid rows
+            G = jax.lax.all_gather(cg_loc, row_axes)
+            I = jax.lax.all_gather(ci_loc, row_axes)
+            W1 = jax.lax.all_gather(w1_loc, row_axes)
+            W2 = jax.lax.all_gather(w2_loc, row_axes)
+            g0, i0, (w1_0, w2_0) = _lex_pick(G, I, [W1, W2], jnp.int32(n))
+            # ---- replicate per-column winners globally (Step C output)
+            Cgain = jax.lax.all_gather(g0, col_axis).reshape(-1)[:n]
+            Ci = jax.lax.all_gather(i0, col_axis).reshape(-1)[:n]
+            Cw1 = jax.lax.all_gather(w1_0, col_axis).reshape(-1)[:n]
+            Cw2 = jax.lax.all_gather(w2_0, col_axis).reshape(-1)[:n]
+            Ci = jnp.where(Cgain > NEG, Ci, n).astype(jnp.int32)
+            # ---- Step D + augmentation: replicated, shared with single-device
+            state, n_surv = single.select_and_augment(
+                n, Cgain, Ci, Cw1, Cw2, state, min_gain
+            )
+            return state, it + 1, n_surv > 0, drop_acc + d1 + d2
+
+        def cond(carry):
+            _, it, go, _ = carry
+            return go & (it < max_iter)
+
+        state0 = MatchState(mate_row, mate_col, u, v)
+        state, iters, _, dropped = jax.lax.while_loop(
+            cond, round_body, (state0, jnp.array(0, jnp.int32), jnp.array(True),
+                               jnp.array(0, jnp.int32))
+        )
+        dropped = jax.lax.psum(dropped, all_axes)
+        return state.mate_row, state.mate_col, state.u, state.v, iters, dropped
+
+    blk = spec.block_spec()
+    fn = jax.shard_map(
+        block_fn,
+        mesh=spec.mesh,
+        in_specs=(blk, blk, blk, P(), P(), P(), P()),
+        out_specs=(P(), P(), P(), P(), P(), P()),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def run(brow, bcol, bval, state: MatchState):
+        mr, mc, u, v, iters, dropped = fn(
+            brow, bcol, bval, state.mate_row, state.mate_col, state.u, state.v
+        )
+        return MatchState(mr, mc, u, v), iters, dropped
+
+    return run
+
+
+def make_dist_greedy_maximal(spec: GridSpec, n: int, cap: int, max_rounds: int = 0):
+    """Distributed greedy weighted maximal matching (proposal rounds).
+    Bit-identical to repro.core.single.greedy_maximal."""
+    pr, pc = spec.pr, spec.pc
+    br = -(-n // pr)
+    bc = -(-n // pc)
+    row_axes = spec.row_axes if len(spec.row_axes) > 1 else spec.row_axes[0]
+    col_axis = spec.col_axis
+    jvec = jnp.arange(n, dtype=jnp.int32)
+    ivec = jnp.arange(n, dtype=jnp.int32)
+
+    def block_fn(brow, bcol, bval, mate_row, mate_col):
+        brow = brow.reshape(-1)
+        bcol = bcol.reshape(-1)
+        bval = bval.reshape(-1)
+        b = jax.lax.axis_index(col_axis)
+
+        def round_body(carry):
+            mate_row, mate_col, _ = carry
+            avail = (brow < n) & (mate_col[brow] == n) & (mate_row[bcol] == n)
+            lj = jnp.where(avail, bcol - b * bc, bc).astype(jnp.int32)
+            score = jnp.where(avail, bval, NEG)
+            Pg, Pidx = segment_argmax_tie(score, brow, lj, bc + 1)
+            sel = jnp.clip(Pidx[:bc], 0)
+            has = Pidx[:bc] >= 0
+            pg_loc = Pg[:bc]
+            pi_loc = jnp.where(has, brow[sel], n).astype(jnp.int32)
+            G = jax.lax.all_gather(pg_loc, row_axes)
+            I = jax.lax.all_gather(pi_loc, row_axes)
+            g0, i0, _ = _lex_pick(G, I, [], jnp.int32(n))
+            prop_val = jax.lax.all_gather(g0, col_axis).reshape(-1)[:n]
+            prop_row = jax.lax.all_gather(i0, col_axis).reshape(-1)[:n]
+            prop_row = jnp.where(prop_val > NEG, prop_row, n).astype(jnp.int32)
+            # replicated per-row contest (same as single-device round)
+            pv = jnp.where(prop_row < n, prop_val, NEG)
+            _, rj = segment_max_with_payload(pv, jvec, prop_row, n + 1)
+            ok = rj[:n] >= 0
+            wcol = jnp.where(ok, rj[:n], n).astype(jnp.int32)
+            mate_col = mate_col.at[jnp.where(ok, ivec, n)].set(wcol)
+            mate_row = mate_row.at[wcol].set(jnp.where(ok, ivec, n).astype(jnp.int32))
+            mate_col = mate_col.at[n].set(n)
+            mate_row = mate_row.at[n].set(n)
+            return mate_row, mate_col, ok.any()
+
+        mate_row, mate_col, _ = jax.lax.while_loop(
+            lambda c: c[2], round_body, (mate_row, mate_col, jnp.array(True))
+        )
+        return mate_row, mate_col
+
+    blk = spec.block_spec()
+    fn = jax.shard_map(
+        block_fn, mesh=spec.mesh,
+        in_specs=(blk, blk, blk, P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def run(brow, bcol, bval):
+        n_ = n
+        mr0 = jnp.full((n_ + 1,), n_, jnp.int32)
+        mc0 = jnp.full((n_ + 1,), n_, jnp.int32)
+        return fn(brow, bcol, bval, mr0, mc0)
+
+    return run
+
+
+def make_dist_mcm(spec: GridSpec, n: int, cap: int):
+    """Distributed maximum cardinality matching: layered BFS with per-row
+    parent selection across the grid, replicated trace/flip (shared with the
+    single-device implementation). Bit-identical to repro.core.single.mcm."""
+    pr, pc = spec.pr, spec.pc
+    br = -(-n // pr)
+    bc = -(-n // pc)
+    row_axes = spec.row_axes if len(spec.row_axes) > 1 else spec.row_axes[0]
+    col_axis = spec.col_axis
+
+    def block_fn(brow, bcol, bval, mate_row, mate_col):
+        brow = brow.reshape(-1)
+        bcol = bcol.reshape(-1)
+        bval = bval.reshape(-1)
+        a = jax.lax.axis_index(spec.row_axes if len(spec.row_axes) > 1
+                               else spec.row_axes[0])
+
+        def bfs(mate_row, mate_col):
+            frontier = jnp.zeros((n + 1,), bool).at[:n].set(mate_row[:n] == n)
+            parent_col = jnp.full((n + 1,), n, jnp.int32)
+            visited = jnp.zeros((n + 1,), bool)
+
+            def bfs_body(carry):
+                frontier, parent_col, visited, found, layers, _ = carry
+                elig = (brow < n) & frontier[bcol] & (~visited[brow])
+                li = jnp.where(elig, brow - a * br, br).astype(jnp.int32)
+                score = jnp.where(elig, bval, NEG)
+                Rg, Ridx = segment_argmax_tie(score, bcol, li, br + 1)
+                sel = jnp.clip(Ridx[:br], 0)
+                has = Ridx[:br] >= 0
+                rg_loc = Rg[:br]
+                rc_loc = jnp.where(has, bcol[sel], n).astype(jnp.int32)
+                # combine across grid columns (a row's edges live in one grid
+                # row, spread over all grid columns)
+                G = jax.lax.all_gather(rg_loc, col_axis)
+                C = jax.lax.all_gather(rc_loc, col_axis)
+                g0, c0, _ = _lex_pick(G, C, [], jnp.int32(n))
+                # replicate across grid rows -> global per-row parent
+                pval = jax.lax.all_gather(g0, row_axes).reshape(-1)[:n]
+                pcol = jax.lax.all_gather(c0, row_axes).reshape(-1)[:n]
+                new = (pval > NEG) & (~visited[:n])
+                pc_new = jnp.where(new, pcol, parent_col[:n]).astype(jnp.int32)
+                parent_col = parent_col.at[:n].set(pc_new)
+                visited = visited.at[:n].set(visited[:n] | new)
+                free_new = new & (mate_col[:n] == n)
+                found = free_new.any()
+                nf_idx = jnp.where(new & ~free_new, mate_col[:n], n)
+                frontier = (jnp.zeros((n + 1,), bool).at[nf_idx].set(True)
+                            .at[n].set(False))
+                return frontier, parent_col, visited, found, layers + 1, new.any()
+
+            def bfs_cond(carry):
+                _, _, _, found, layers, progressed = carry
+                return (~found) & progressed & (layers <= n)
+
+            return jax.lax.while_loop(
+                bfs_cond, bfs_body,
+                (frontier, parent_col, visited, jnp.array(False),
+                 jnp.array(0, jnp.int32), jnp.array(True)),
+            )
+
+        def phase_body(carry):
+            mate_row, mate_col, _ = carry
+            frontier, parent_col, visited, found, layers, _ = bfs(mate_row, mate_col)
+            mate_row, mate_col = single.trace_and_flip(
+                parent_col, visited, found, layers, mate_row, mate_col, n
+            )
+            return mate_row, mate_col, found
+
+        def phase_cond(carry):
+            mate_row, _, go = carry
+            return go & (mate_row[:n] == n).any()
+
+        mate_row, mate_col, _ = jax.lax.while_loop(
+            phase_cond, phase_body, (mate_row, mate_col, jnp.array(True))
+        )
+        return mate_row, mate_col
+
+    blk = spec.block_spec()
+    fn = jax.shard_map(
+        block_fn, mesh=spec.mesh,
+        in_specs=(blk, blk, blk, P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )
+
+    @jax.jit
+    def run(brow, bcol, bval, mate_row, mate_col):
+        return fn(brow, bcol, bval, mate_row, mate_col)
+
+    return run
+
+
+# --------------------------------------------------------------------------
+# Host-level driver
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DistAWPM:
+    """End-to-end distributed AWPM on a GridSpec. Partitions the graph,
+    builds the three jitted phases, runs them in sequence."""
+
+    spec: GridSpec
+    n: int
+    cap: int
+    a2a_caps: tuple[int, int]
+    max_iter: int = 1000
+    min_gain: float = MIN_GAIN
+    packed: bool = False
+
+    def __post_init__(self):
+        self._greedy = make_dist_greedy_maximal(self.spec, self.n, self.cap)
+        self._mcm = make_dist_mcm(self.spec, self.n, self.cap)
+        self._awac = make_dist_awac(
+            self.spec, self.n, self.cap, self.a2a_caps, self.max_iter,
+            self.min_gain, packed=self.packed,
+        )
+
+    def partition(self, g):
+        """BipartiteGraph -> device-sharded block arrays."""
+        m = np.arange(g.capacity) < g.nnz
+        part = partition_coo_2d(
+            g.row[m], g.col[m], g.val[m], self.n, self.spec.pr, self.spec.pc,
+            cap=self.cap,
+        )
+        sharding = jax.sharding.NamedSharding(self.spec.mesh, self.spec.block_spec())
+        brow = jax.device_put(part.row, sharding)
+        bcol = jax.device_put(part.col, sharding)
+        bval = jax.device_put(part.val, sharding)
+        return brow, bcol, bval
+
+    def run(self, g, state: MatchState | None = None):
+        """Returns (state, awac_iters, dropped)."""
+        brow, bcol, bval = self.partition(g)
+        if state is None:
+            mr, mc = self._greedy(brow, bcol, bval)
+            mr, mc = self._mcm(brow, bcol, bval, mr, mc)
+            # u, v from mates (cheap replicated lookup on host path)
+            row = jnp.asarray(g.row)
+            col = jnp.asarray(g.col)
+            val = jnp.asarray(g.val)
+            state = single.state_from_mates(row, col, val, self.n, mr, mc)
+        return self._awac(brow, bcol, bval, state)
+
+
+def default_caps(n: int, m: int, pr: int, pc: int, slack: float = 2.0):
+    """Bucket capacities for the two routing stages: expected load x slack.
+    Under the paper's i.i.d. assumption each process receives O(m/p) requests."""
+    cap_block = max(int(slack * m / (pr * pc)) + 16, 32)
+    cap1 = max(int(slack * cap_block / pc) + 16, 16)
+    cap2 = max(int(slack * cap1 * pc / pr) + 16, 16)
+    return cap1, cap2

@@ -1,0 +1,341 @@
+"""Single-device (pure jnp, jit-able) AWPM: greedy maximal -> MCM -> AWAC.
+
+This is both (a) the single-node baseline the paper compares against ("sequential
+AWPM", §6.1) and (b) the reference implementation the distributed shard_map
+version must agree with: the Step C/D selection + augmentation logic
+(`select_and_augment`) is *shared* between the two — the distributed code only
+replaces how the per-column Step-C winners are computed (local segment ops +
+collectives instead of full-array segment ops).
+
+Conventions (everywhere in repro.core):
+  - square matrix, n rows == n cols; edges as padded COO sorted lex by (row, col)
+    with padding entries (n, n, 0).
+  - ``mate_row`` [n+1]: row matched to column j (sentinel n = unmatched;
+    slot n is always n). ``mate_col`` [n+1]: column matched to row i.
+  - ``u`` [n+1]: weight of row i's matched edge; ``v`` [n+1]: weight of column
+    j's matched edge. Slot n is 0.
+  - all weights float32; gains computed as ``w1 + w2 - u - v`` in that order so
+    numpy reference and jnp agree exactly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.ops import lex_searchsorted, segment_max_with_payload
+
+NEG = -jnp.inf
+MIN_GAIN = 1e-6
+
+
+class MatchState(NamedTuple):
+    mate_row: jnp.ndarray  # [n+1] int32
+    mate_col: jnp.ndarray  # [n+1] int32
+    u: jnp.ndarray  # [n+1] float32
+    v: jnp.ndarray  # [n+1] float32
+
+
+def empty_state(n: int) -> MatchState:
+    return MatchState(
+        jnp.full((n + 1,), n, jnp.int32),
+        jnp.full((n + 1,), n, jnp.int32),
+        jnp.zeros((n + 1,), jnp.float32),
+        jnp.zeros((n + 1,), jnp.float32),
+    )
+
+
+def state_from_mates(row, col, val, n, mate_row, mate_col) -> MatchState:
+    """Build MatchState (incl. u, v) from mate arrays (numpy or jnp, len n or n+1)."""
+    mate_row = jnp.asarray(mate_row, jnp.int32)
+    mate_col = jnp.asarray(mate_col, jnp.int32)
+    if mate_row.shape[0] == n:
+        mate_row = jnp.concatenate([mate_row, jnp.array([n], jnp.int32)])
+        mate_col = jnp.concatenate([mate_col, jnp.array([n], jnp.int32)])
+    ivec = jnp.arange(n, dtype=jnp.int32)
+    pos, found = lex_searchsorted(row, col, ivec, mate_col[:n])
+    uu = jnp.where(found, val[pos], 0.0)
+    u = jnp.zeros((n + 1,), jnp.float32).at[:n].set(uu)
+    v = jnp.zeros((n + 1,), jnp.float32).at[:n].set(
+        jnp.where(mate_row[:n] < n, u[mate_row[:n]], 0.0)
+    )
+    return MatchState(mate_row, mate_col, u, v)
+
+
+def matching_weight(state: MatchState, n: int) -> jnp.ndarray:
+    return state.u[:n].sum()
+
+
+def is_perfect(state: MatchState, n: int) -> jnp.ndarray:
+    return (state.mate_row[:n] < n).all()
+
+
+# --------------------------------------------------------------------------
+# Phase 1: greedy weighted maximal matching (proposal rounds)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def greedy_maximal(row, col, val, n: int) -> MatchState:
+    cap = row.shape[0]
+    eidx = jnp.arange(cap, dtype=jnp.int32)
+    jvec = jnp.arange(n, dtype=jnp.int32)
+    ivec = jnp.arange(n, dtype=jnp.int32)
+
+    def round_body(carry):
+        mate_row, mate_col, _ = carry
+        avail = (row < n) & (mate_col[row] == n) & (mate_row[col] == n)
+        score = jnp.where(avail, val, NEG)
+        seg = jnp.where(avail, col, n)
+        pg, pe = segment_max_with_payload(score, eidx, seg, n + 1)
+        has = pe[:n] >= 0
+        prow = jnp.where(has, row[jnp.clip(pe[:n], 0)], n)
+        pv = jnp.where(has, pg[:n], NEG)
+        _, rj = segment_max_with_payload(pv, jvec, prow, n + 1)
+        ok = rj[:n] >= 0  # per-row winning proposal col
+        wcol = jnp.where(ok, rj[:n], n).astype(jnp.int32)
+        mate_col = mate_col.at[jnp.where(ok, ivec, n)].set(wcol)
+        mate_row = mate_row.at[wcol].set(jnp.where(ok, ivec, n).astype(jnp.int32))
+        mate_col = mate_col.at[n].set(n)
+        mate_row = mate_row.at[n].set(n)
+        return mate_row, mate_col, ok.any()
+
+    def cond(carry):
+        return carry[2]
+
+    st0 = empty_state(n)
+    mate_row, mate_col, _ = jax.lax.while_loop(
+        cond, round_body, (st0.mate_row, st0.mate_col, jnp.array(True))
+    )
+    return state_from_mates(row, col, val, n, mate_row, mate_col)
+
+
+# --------------------------------------------------------------------------
+# Phase 2: maximum cardinality matching (layered BFS + lockstep trace/flip)
+# --------------------------------------------------------------------------
+
+
+def trace_and_flip(parent_col, visited, found, layers, mate_row, mate_col, n):
+    """Lockstep backtrace with per-column claims (winner = smallest endpoint
+    row id), then flip the surviving vertex-disjoint augmenting paths.
+
+    All augmenting paths from one layered BFS have the same number of column
+    steps (``layers``) and every column belongs to exactly one BFS layer, so
+    claim conflicts can only occur between walkers at the same step — one
+    claim round per step suffices. Shared verbatim by the distributed MCM.
+    """
+    widx = jnp.arange(n + 1, dtype=jnp.int32)  # walker ids (= endpoint row ids)
+    endpoints = jnp.zeros((n + 1,), bool).at[:n].set(
+        visited[:n] & (mate_col[:n] == n)
+    ) & found
+
+    def claim_body(carry):
+        active, cur, t = carry
+        j_w = jnp.where(active, parent_col[cur], n)
+        win = jax.ops.segment_min(widx, j_w, num_segments=n + 1)
+        active = active & (win[j_w] == widx)
+        nxt = mate_row[j_w]
+        cur = jnp.where(active & (nxt < n), nxt, cur)
+        return active, cur, t + 1
+
+    active, _, _ = jax.lax.while_loop(
+        lambda c: c[2] < layers,
+        claim_body,
+        (endpoints, widx, jnp.array(0, jnp.int32)),
+    )
+
+    def flip_body(carry):
+        surv, cur, mate_row, mate_col, t = carry
+        j = jnp.where(surv, parent_col[cur], n)
+        prev = mate_row[j]
+        mate_row = mate_row.at[j].set(jnp.where(surv, cur, mate_row[j]).astype(jnp.int32))
+        mate_col = mate_col.at[jnp.where(surv, cur, n)].set(j.astype(jnp.int32))
+        mate_row = mate_row.at[n].set(n)
+        mate_col = mate_col.at[n].set(n)
+        surv = surv & (prev < n)
+        cur = jnp.where(surv, prev, cur)
+        return surv, cur, mate_row, mate_col, t + 1
+
+    _, _, mate_row, mate_col, _ = jax.lax.while_loop(
+        lambda c: c[4] < layers,
+        flip_body,
+        (active, widx, mate_row, mate_col, jnp.array(0, jnp.int32)),
+    )
+    return mate_row, mate_col
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def mcm(row, col, val, n: int, mate_row, mate_col) -> MatchState:
+    """Maximum cardinality matching from an initial matching, with the paper's
+    weight-aware tie-breaking (heaviest eligible edge chosen as BFS parent)."""
+    cap = row.shape[0]
+    eidx = jnp.arange(cap, dtype=jnp.int32)
+
+    def bfs(mate_row, mate_col):
+        frontier = jnp.zeros((n + 1,), bool).at[:n].set(mate_row[:n] == n)
+        parent_col = jnp.full((n + 1,), n, jnp.int32)
+        visited = jnp.zeros((n + 1,), bool)
+
+        def bfs_body(carry):
+            frontier, parent_col, visited, found, layers, _ = carry
+            elig = (row < n) & frontier[col] & (~visited[row])
+            score = jnp.where(elig, val, NEG)
+            seg = jnp.where(elig, row, n)
+            _, re = segment_max_with_payload(score, eidx, seg, n + 1)
+            new = re[:n] >= 0
+            pc = jnp.where(new, col[jnp.clip(re[:n], 0)], parent_col[:n])
+            parent_col = parent_col.at[:n].set(pc.astype(jnp.int32))
+            visited = visited.at[:n].set(visited[:n] | new)
+            free_new = new & (mate_col[:n] == n)
+            found = free_new.any()
+            nf_idx = jnp.where(new & ~free_new, mate_col[:n], n)
+            frontier = jnp.zeros((n + 1,), bool).at[nf_idx].set(True).at[n].set(False)
+            return frontier, parent_col, visited, found, layers + 1, new.any()
+
+        def bfs_cond(carry):
+            _, _, _, found, layers, progressed = carry
+            return (~found) & progressed & (layers <= n)
+
+        frontier, parent_col, visited, found, layers, _ = jax.lax.while_loop(
+            bfs_cond,
+            bfs_body,
+            (frontier, parent_col, visited, jnp.array(False), jnp.array(0, jnp.int32),
+             jnp.array(True)),
+        )
+        return parent_col, visited, found, layers
+
+    def phase_body(carry):
+        mate_row, mate_col, _ = carry
+        parent_col, visited, found, layers = bfs(mate_row, mate_col)
+        mate_row, mate_col = trace_and_flip(
+            parent_col, visited, found, layers, mate_row, mate_col, n
+        )
+        return mate_row, mate_col, found
+
+    def phase_cond(carry):
+        mate_row, _, go = carry
+        return go & (mate_row[:n] == n).any()
+
+    if mate_row.shape[0] == n:
+        mate_row = jnp.concatenate([jnp.asarray(mate_row, jnp.int32),
+                                    jnp.array([n], jnp.int32)])
+        mate_col = jnp.concatenate([jnp.asarray(mate_col, jnp.int32),
+                                    jnp.array([n], jnp.int32)])
+    mate_row, mate_col, _ = jax.lax.while_loop(
+        phase_cond, phase_body, (mate_row, mate_col, jnp.array(True))
+    )
+    return state_from_mates(row, col, val, n, mate_row, mate_col)
+
+
+# --------------------------------------------------------------------------
+# Phase 3: AWAC — approximate-weight augmenting 4-cycles
+# --------------------------------------------------------------------------
+
+
+def select_and_augment(n, Cgain, Ci, Cw1, Cw2, state: MatchState, min_gain):
+    """Steps D + survivor selection + augmentation, given global per-column
+    Step-C winners. O(n) dense compute, replicated verbatim on every device in
+    the distributed version.
+
+    Cgain [n] f32 (-inf if column unrooted), Ci [n] winner row, Cw1/Cw2 [n]
+    weights of the (i,j) and (m_j, m_i) edges of the winning cycle.
+    Returns (new_state, n_survivors).
+    """
+    mate_row, mate_col, u, v = state
+    jvec = jnp.arange(n, dtype=jnp.int32)
+    rooted = Cgain > NEG
+    Ci_s = jnp.clip(Ci, 0, n)  # safe gather index
+    e2 = jnp.where(rooted, mate_col[Ci_s], n)  # column of row i's matched edge
+    dgain = jnp.where(rooted, Cgain, NEG)
+    dg, dj = segment_max_with_payload(dgain, jvec, e2, n + 1)
+    surv_c2 = (dg[:n] > NEG) & (~rooted)  # e2-columns whose winner survives
+    surv_root = jnp.where(surv_c2, dj[:n], n)
+    mask_j = jnp.zeros((n + 1,), bool).at[surv_root].set(True)[:n] & rooted
+    n_surv = mask_j.sum()
+
+    # deterministic fallback: single globally-best cycle (paper: random augm.)
+    best_j = jnp.argmax(jnp.where(rooted, Cgain, NEG))
+    use_fb = (n_surv == 0) & rooted.any()
+    mask_j = mask_j | ((jvec == best_j) & use_fb)
+    n_surv = n_surv + use_fb.astype(n_surv.dtype)
+
+    # ---- augment all surviving cycles (vertex-disjoint by construction)
+    i_ = Ci_s
+    r2 = mate_row[:n]  # old mate row of each column j
+    c2 = mate_col[i_]  # old mate col of each winner row i
+    mj = jnp.where(mask_j, jvec, n)
+    mi = jnp.where(mask_j, i_, n)
+    mr2 = jnp.where(mask_j, r2, n)
+    mc2 = jnp.where(mask_j, c2, n)
+    mate_row = mate_row.at[mj].set(jnp.where(mask_j, i_, mate_row[mj]).astype(jnp.int32))
+    mate_row = mate_row.at[mc2].set(jnp.where(mask_j, r2, mate_row[mc2]).astype(jnp.int32))
+    mate_col = mate_col.at[mi].set(jnp.where(mask_j, jvec, mate_col[mi]).astype(jnp.int32))
+    mate_col = mate_col.at[mr2].set(jnp.where(mask_j, c2, mate_col[mr2]).astype(jnp.int32))
+    u = u.at[mi].set(jnp.where(mask_j, Cw1, u[mi]))
+    u = u.at[mr2].set(jnp.where(mask_j, Cw2, u[mr2]))
+    v = v.at[mj].set(jnp.where(mask_j, Cw1, v[mj]))
+    v = v.at[mc2].set(jnp.where(mask_j, Cw2, v[mc2]))
+    mate_row = mate_row.at[n].set(n)
+    mate_col = mate_col.at[n].set(n)
+    u = u.at[n].set(0.0)
+    v = v.at[n].set(0.0)
+    return MatchState(mate_row, mate_col, u, v), n_surv
+
+
+def awac_candidates(row, col, val, n, state: MatchState, min_gain):
+    """Steps A+B on the full edge list: per-edge completion lookup + gain."""
+    mate_row, mate_col, u, v = state
+    qr = mate_row[col]  # m_j for each edge's column
+    qc = mate_col[row]  # m_i for each edge's row
+    pos, found = lex_searchsorted(row, col, qr, qc)
+    w2 = jnp.where(found, val[pos], 0.0)
+    gain = val + w2 - u[row] - v[col]
+    cand = found & (row < n) & (row > qr) & (gain > min_gain)
+    return cand, gain, w2
+
+
+def awac_cwinners(row, col, val, n, state: MatchState, min_gain):
+    """Step C on the full edge list: per-column winner (gain, i, w1, w2)."""
+    cand, gain, w2 = awac_candidates(row, col, val, n, state, min_gain)
+    cap = row.shape[0]
+    eidx = jnp.arange(cap, dtype=jnp.int32)
+    seg = jnp.where(cand, col, n)
+    gm = jnp.where(cand, gain, NEG)
+    Cgain_full, Cedge = segment_max_with_payload(gm, eidx, seg, n + 1)
+    Cgain, Cedge = Cgain_full[:n], Cedge[:n]
+    ce = jnp.clip(Cedge, 0)
+    has = Cedge >= 0
+    Ci = jnp.where(has, row[ce], n).astype(jnp.int32)
+    Cw1 = jnp.where(has, val[ce], 0.0)
+    Cw2 = jnp.where(has, w2[ce], 0.0)
+    return Cgain, Ci, Cw1, Cw2
+
+
+@functools.partial(jax.jit, static_argnames=("n", "max_iter"))
+def awac(row, col, val, n: int, state: MatchState, max_iter: int = 1000,
+         min_gain: float = MIN_GAIN):
+    """Full AWAC loop. Returns (state, iters)."""
+
+    def body(carry):
+        state, it, _ = carry
+        Cgain, Ci, Cw1, Cw2 = awac_cwinners(row, col, val, n, state, min_gain)
+        state, n_surv = select_and_augment(n, Cgain, Ci, Cw1, Cw2, state, min_gain)
+        return state, it + 1, n_surv > 0
+
+    def cond(carry):
+        _, it, go = carry
+        return go & (it < max_iter)
+
+    state, iters, _ = jax.lax.while_loop(
+        cond, body, (state, jnp.array(0, jnp.int32), jnp.array(True))
+    )
+    return state, iters
+
+
+def awpm(row, col, val, n: int, max_iter: int = 1000, min_gain: float = MIN_GAIN):
+    """Full pipeline: greedy maximal -> MCM -> AWAC. Returns (state, awac_iters)."""
+    st = greedy_maximal(row, col, val, n)
+    st = mcm(row, col, val, n, st.mate_row, st.mate_col)
+    return awac(row, col, val, n, st, max_iter=max_iter, min_gain=min_gain)

@@ -1,0 +1,13 @@
+"""Matrix pipeline for the matching core: generation + 2D distribution.
+(The generators live in repro.core.graph; this module is the data-pipeline
+facade used by benchmarks/examples.)"""
+from repro.core.graph import SUITE_KINDS, generate, matrix_suite, normalize_rowcol_max
+from repro.sparse.partition import partition_coo_2d
+
+__all__ = [
+    "SUITE_KINDS",
+    "generate",
+    "matrix_suite",
+    "normalize_rowcol_max",
+    "partition_coo_2d",
+]

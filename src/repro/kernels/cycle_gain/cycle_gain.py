@@ -1,0 +1,91 @@
+"""Pallas TPU kernel for the paper's hot spot: fused 4-cycle gain + Step-C
+per-column max/argmax over dense tiles.
+
+Given a block tile of the matrix A and the matching-permuted tile
+A2[i, j] = A[m_j, m_i] (both with structural zeros encoded as exact 0.0),
+and the matched-edge weights u (rows) / v (cols), computes
+
+    W[i, j] = A[i, j] + A2[i, j] - u[i] - v[j]          (gain of the 4-cycle)
+    best_gain[j] = max_i W[i, j],  best_row[j] = argmax_i W[i, j]
+
+masked to entries where BOTH A and A2 are structurally present. Ties break
+toward the smallest row index, matching repro.core's selection rule.
+
+TPU adaptation (DESIGN.md §2): the CPU algorithm walks CSR adjacency per
+vertex; on TPU we densify per VMEM tile — the MXU/VPU prefer dense 8x128
+lanes, and per-column max is a lane-wise reduction. The same kernel computes
+the swap-gain matrix of the AWPM MoE router (token x expert-slot
+assignment), where tiles are naturally dense.
+
+Grid: (n_tiles, m_tiles) — m (row) tiles iterate fastest; the output column
+tile is revisited across row tiles and accumulated in place.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = float("-inf")
+
+
+def _kernel(a_ref, a2_ref, u_ref, v_ref, gain_ref, row_ref, *, tm: int):
+    im = pl.program_id(1)
+
+    @pl.when(im == 0)
+    def _init():
+        gain_ref[...] = jnp.full_like(gain_ref, NEG)
+        row_ref[...] = jnp.full_like(row_ref, -1)
+
+    a = a_ref[...]
+    a2 = a2_ref[...]
+    mask = (a != 0.0) & (a2 != 0.0)
+    w = a + a2 - u_ref[...] - v_ref[...]  # u: [TM,1] broadcasts, v: [1,TN]
+    w = jnp.where(mask, w, NEG)
+    g = jnp.max(w, axis=0, keepdims=True)  # [1, TN]
+    # argmax with smallest-row tie-break: first hit along rows
+    rows = jax.lax.broadcasted_iota(jnp.int32, w.shape, 0)
+    hit = (w == g) & (g > NEG)
+    r = jnp.min(jnp.where(hit, rows, jnp.iinfo(jnp.int32).max), axis=0,
+                keepdims=True)
+    r = jnp.where(g > NEG, r + im * tm, -1)
+    better = g > gain_ref[...]
+    row_ref[...] = jnp.where(better, r.astype(jnp.int32), row_ref[...])
+    gain_ref[...] = jnp.where(better, g, gain_ref[...])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tm", "tn", "interpret")
+)
+def cycle_gain(a, a2, u, v, *, tm: int = 256, tn: int = 256,
+               interpret: bool = True):
+    """a, a2: [M, N] f32 (0.0 = structurally absent); u: [M] f32; v: [N] f32.
+    Returns (best_gain [N] f32, best_row [N] i32, -1 where no candidate).
+
+    M, N must be multiples of (tm, tn); use ops.cycle_gain_padded otherwise.
+    """
+    m, n = a.shape
+    assert m % tm == 0 and n % tn == 0, (m, n, tm, tn)
+    grid = (n // tn, m // tm)
+    out = pl.pallas_call(
+        functools.partial(_kernel, tm=tm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, tn), lambda i, j: (j, i)),
+            pl.BlockSpec((tm, tn), lambda i, j: (j, i)),
+            pl.BlockSpec((tm, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, tn), lambda i, j: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tn), lambda i, j: (0, i)),
+            pl.BlockSpec((1, tn), lambda i, j: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.float32),
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a, a2, u[:, None], v[None, :])
+    return out[0][0], out[1][0]

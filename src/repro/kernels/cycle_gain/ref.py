@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the cycle_gain kernel."""
+import jax.numpy as jnp
+
+NEG = float("-inf")
+
+
+def cycle_gain_ref(a, a2, u, v):
+    """Same contract as kernels.cycle_gain.cycle_gain (no tiling constraint)."""
+    mask = (a != 0.0) & (a2 != 0.0)
+    w = a + a2 - u[:, None] - v[None, :]
+    w = jnp.where(mask, w, NEG)
+    g = jnp.max(w, axis=0)
+    rows = jnp.arange(a.shape[0], dtype=jnp.int32)[:, None]
+    hit = (w == g[None, :]) & (g[None, :] > NEG)
+    r = jnp.min(jnp.where(hit, rows, jnp.iinfo(jnp.int32).max), axis=0)
+    r = jnp.where(g > NEG, r, -1)
+    return g, r.astype(jnp.int32)

@@ -1,0 +1,31 @@
+"""jit'd wrapper for embedding_bag: padding + dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def _round_up(x, m):
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "tv", "use_kernel", "interpret"))
+def embedding_bag_padded(idx, w, table, *, tb: int = 8, tv: int = 512,
+                         use_kernel: bool = True, interpret: bool = True):
+    if not use_kernel:
+        return embedding_bag_ref(idx, w, table)
+    b, l = idx.shape
+    v, d = table.shape
+    tb = min(tb, _round_up(b, 8))
+    tv = min(tv, _round_up(v, 128))
+    bp, vp = _round_up(b, tb), _round_up(v, tv)
+    idx_p = jnp.full((bp, l), -1, idx.dtype).at[:b].set(idx)
+    w_p = jnp.zeros((bp, l), w.dtype).at[:b].set(w)
+    tbl_p = jnp.zeros((vp, d), table.dtype).at[:v].set(table)
+    out = embedding_bag(idx_p, w_p, tbl_p, tb=tb, tv=tv, interpret=interpret)
+    return out[:b]

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for embedding_bag (gather + weighted sum)."""
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(idx, w, table):
+    """idx [B, L] int32 (-1 padding); w [B, L]; table [V, D] -> [B, D] f32."""
+    safe = jnp.clip(idx, 0, table.shape[0] - 1)
+    rows = jnp.take(table, safe, axis=0).astype(jnp.float32)  # [B, L, D]
+    wm = jnp.where(idx >= 0, w, 0.0).astype(jnp.float32)
+    return jnp.sum(rows * wm[:, :, None], axis=1)

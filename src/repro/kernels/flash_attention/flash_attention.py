@@ -1,0 +1,101 @@
+"""Pallas TPU flash attention (forward), GQA-aware, causal/full.
+
+Blockwise online-softmax attention with explicit VMEM tiling:
+grid (B, H, num_q_tiles, num_kv_tiles), kv innermost; running (m, l, acc)
+live in VMEM scratch that persists across the kv grid dimension (the output
+block index is constant along it), written back on the last kv step.
+
+GQA: the k/v BlockSpec index maps query head h to kv head h // (H // Hkv),
+so kv tiles are fetched once per group without materializing repeats.
+
+Used for LM prefill/training forward; the decode path (1 query token against
+a sharded KV cache) uses the two-pass sharded softmax in
+repro.models.attention instead (flash-decoding style), which XLA handles
+well without a custom kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = float("-inf")
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            causal: bool, scale: float, tq: int, tk: int, nk: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [tq, tk]
+    if causal:
+        qpos = iq * tq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = ik * tk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(qpos >= kpos, s, NEG)
+
+    m_prev = m_ref[...]
+    row_max = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, row_max)
+    m_safe = jnp.where(m_new > NEG, m_new, 0.0)
+    p = jnp.exp(s - m_safe)  # exp(-inf)=0 keeps fully-masked rows at 0
+    alpha = jnp.exp(m_prev - m_safe)
+    l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "tq", "tk", "interpret")
+)
+def flash_attention(q, k, v, *, causal: bool = True, tq: int = 128,
+                    tk: int = 128, interpret: bool = True):
+    """q: [B, H, S, D]; k, v: [B, Hkv, S, D] with H % Hkv == 0.
+    S must be a multiple of max(tq, tk). Returns [B, H, S, D] in q.dtype."""
+    b, h, s, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert h % hkv == 0 and s % tq == 0 and sk % tk == 0, (q.shape, k.shape)
+    group = h // hkv
+    nq, nk = s // tq, sk // tk
+    scale = 1.0 / (d ** 0.5)
+    out = pl.pallas_call(
+        functools.partial(_kernel, causal=causal, scale=scale, tq=tq, tk=tk,
+                          nk=nk),
+        grid=(b, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, tq, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, tk, d),
+                         lambda b, h, iq, ik, group=group: (b, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, tk, d),
+                         lambda b, h, iq, ik, group=group: (b, h // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, tq, d), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tq, d), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+            pltpu.VMEM((tq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

@@ -1,0 +1,50 @@
+"""jit'd wrapper: model-layout attention entry point with kernel dispatch.
+
+Model layout is [B, S, H, D] (sequence-major, as produced by the QKV
+projections); the kernel wants [B, H, S, D]. A recompute-based custom_vjp
+makes the kernel usable in training forward passes: backward re-runs the jnp
+reference (IO-optimal backward kernels are a recorded perf-TODO in
+EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_kernel", "interpret"))
+def attention(q, k, v, *, causal: bool = True, use_kernel: bool = False,
+              interpret: bool = True):
+    """q [B, S, H, D]; k, v [B, Sk, Hkv, D] -> [B, S, H, D]."""
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    if use_kernel:
+        o = _attention_vjp(qt, kt, vt, causal, interpret)
+    else:
+        o = attention_ref(qt, kt, vt, causal=causal)
+    return jnp.swapaxes(o, 1, 2)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _attention_vjp(q, k, v, causal, interpret):
+    return flash_attention(q, k, v, causal=causal, interpret=interpret)
+
+
+def _fwd(q, k, v, causal, interpret):
+    return flash_attention(q, k, v, causal=causal, interpret=interpret), (q, k, v)
+
+
+def _bwd(causal, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: attention_ref(q, k, v, causal=causal),
+                     q, k, v)
+    return vjp(g)
+
+
+_attention_vjp.defvjp(_fwd, _bwd)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash attention (GQA, causal/full)."""
+import jax.numpy as jnp
+
+NEG = float("-inf")
+
+
+def attention_ref(q, k, v, causal=True):
+    """q [B, H, S, D]; k, v [B, Hkv, Sk, D]. fp32 softmax, output q.dtype."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    group = h // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / (d ** 0.5)
+    s_ = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                    k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(k.shape[2])[None, :]
+        s_ = jnp.where(qpos >= kpos, s_, NEG)
+    m = jnp.max(s_, axis=-1, keepdims=True)
+    m = jnp.where(m > NEG, m, 0.0)
+    p = jnp.exp(s_ - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return (o / jnp.maximum(l, 1e-30)).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.router_swap.ops import router_swap_padded
+from repro.kernels.router_swap.ref import router_swap_ref
+from repro.kernels.router_swap.router_swap import router_swap

@@ -1,0 +1,37 @@
+"""jit'd wrapper for router_swap: pads T to tile multiples and E to lanes."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.router_swap.ref import router_swap_ref
+from repro.kernels.router_swap.router_swap import router_swap
+
+NEG = float("-inf")
+
+
+def _round_up(x, m):
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("ti", "tj", "use_kernel",
+                                             "interpret"))
+def router_swap_padded(affinity, assign, cur, *, ti: int = 256, tj: int = 256,
+                       use_kernel: bool = True, interpret: bool = True):
+    if not use_kernel:
+        return router_swap_ref(affinity, assign, cur)
+    t, e = affinity.shape
+    ti = min(ti, _round_up(t, 8))
+    tj = min(tj, _round_up(t, 128))
+    tp = _round_up(t, max(ti, tj))
+    ep = _round_up(e, 128)
+    # pad affinity with ZEROS (never -inf: -inf + -inf = NaN would poison the
+    # column max); padded tokens get expert id e (distinct from real ids) and
+    # cur=+inf, which drives every gain involving them to exactly -inf
+    aff = jnp.zeros((tp, ep), jnp.float32).at[:t, :e].set(affinity)
+    as_p = jnp.full((tp,), e, jnp.int32).at[:t].set(assign)
+    cur_p = jnp.full((tp,), jnp.inf, jnp.float32).at[:t].set(cur)
+    g, r = router_swap(aff, as_p, cur_p, ti=ti, tj=tj, interpret=interpret)
+    return g[:t], r[:t]

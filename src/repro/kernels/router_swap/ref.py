@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for router_swap (materializes the [T, T] gain matrix)."""
+import jax.numpy as jnp
+
+NEG = float("-inf")
+
+
+def router_swap_ref(affinity, assign, cur):
+    t = affinity.shape[0]
+    a = jnp.take(affinity, assign, axis=1)  # [T, T]: aff[i, e_j]
+    w = a + a.T - cur[:, None] - cur[None, :]
+    tok = jnp.arange(t)
+    same_tok = tok[:, None] == tok[None, :]
+    same_exp = assign[:, None] == assign[None, :]
+    w = jnp.where(same_tok | same_exp, NEG, w)
+    g = jnp.max(w, axis=0)
+    rows = tok[:, None]
+    hit = (w == g[None, :]) & (g[None, :] > NEG)
+    r = jnp.min(jnp.where(hit, rows, jnp.iinfo(jnp.int32).max), axis=0)
+    return g, jnp.where(g > NEG, r, -1).astype(jnp.int32)

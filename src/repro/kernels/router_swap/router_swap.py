@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: tiled swap-gain search for the AWPM MoE router.
+
+The router's 4-cycle (AWAC) phase needs, for every token j, its best swap
+partner i: gain W[i,j] = aff[i, e_j] + aff[j, e_i] - cur[i] - cur[j]. The XLA
+fallback materializes the [T, T] gain matrix; this kernel never does — per
+(TI, TJ) tile it reconstructs A[i,j] = aff[i, e_j] on the MXU as
+``aff_tile @ onehot(assign_tile)^T`` (the canonical TPU gather-as-matmul) and
+accumulates the per-column max/argmax across row tiles, exactly like the
+cycle_gain kernel accumulates Step C winners.
+
+VMEM per step: 2 aff tiles [T_tile, E] + the [TI, TJ] gain tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = float("-inf")
+
+
+def _kernel(aff_i_ref, aff_j_ref, as_i_ref, as_j_ref, cur_i_ref, cur_j_ref,
+            gain_ref, part_ref, *, ti: int, e: int):
+    ij = pl.program_id(0)
+    ii = pl.program_id(1)
+
+    @pl.when(ii == 0)
+    def _init():
+        gain_ref[...] = jnp.full_like(gain_ref, NEG)
+        part_ref[...] = jnp.full_like(part_ref, -1)
+
+    aff_i = aff_i_ref[...]  # [TI, E]
+    aff_j = aff_j_ref[...]  # [TJ, E]
+    as_i = as_i_ref[...]  # [TI, 1] int32
+    as_j = as_j_ref[...]  # [TJ, 1]
+    lanes_i = jax.lax.broadcasted_iota(jnp.int32, (as_i.shape[0], e), 1)
+    lanes_j = jax.lax.broadcasted_iota(jnp.int32, (as_j.shape[0], e), 1)
+    onehot_i = (as_i == lanes_i).astype(aff_i.dtype)  # [TI, E]
+    onehot_j = (as_j == lanes_j).astype(aff_j.dtype)  # [TJ, E]
+    # A[i, j] = aff[i, e_j];  A2[i, j] = aff[j, e_i]
+    a = jax.lax.dot_general(aff_i, onehot_j, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    a2 = jax.lax.dot_general(onehot_i, aff_j, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    w = a + a2 - cur_i_ref[...] - cur_j_ref[...]  # [TI,1] + [1,TJ] broadcast
+    gi = ii * ti + jax.lax.broadcasted_iota(jnp.int32, w.shape, 0)
+    gj = ij * gain_ref.shape[-1] + jax.lax.broadcasted_iota(jnp.int32, w.shape, 1)
+    same_tok = gi == gj
+    same_exp = as_i == jnp.transpose(as_j)  # [TI, TJ] via broadcast
+    w = jnp.where(same_tok | same_exp, NEG, w)
+
+    g = jnp.max(w, axis=0, keepdims=True)  # [1, TJ]
+    rows = jax.lax.broadcasted_iota(jnp.int32, w.shape, 0)
+    hit = (w == g) & (g > NEG)
+    r = jnp.min(jnp.where(hit, rows, jnp.iinfo(jnp.int32).max), axis=0,
+                keepdims=True)
+    r = jnp.where(g > NEG, r + ii * ti, -1)
+    better = g > gain_ref[...]
+    part_ref[...] = jnp.where(better, r.astype(jnp.int32), part_ref[...])
+    gain_ref[...] = jnp.where(better, g, gain_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("ti", "tj", "interpret"))
+def router_swap(affinity, assign, cur, *, ti: int = 256, tj: int = 256,
+                interpret: bool = True):
+    """affinity [T, E] f32; assign [T] int32; cur [T] f32 (current affinity).
+    Returns (best_gain [T], best_partner [T] int32, -1 if none).
+    T % ti == 0, T % tj == 0 required (ops.py pads)."""
+    t, e = affinity.shape
+    assert t % ti == 0 and t % tj == 0, (t, ti, tj)
+    grid = (t // tj, t // ti)
+    out = pl.pallas_call(
+        functools.partial(_kernel, ti=ti, e=e),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ti, e), lambda j, i: (i, 0)),
+            pl.BlockSpec((tj, e), lambda j, i: (j, 0)),
+            pl.BlockSpec((ti, 1), lambda j, i: (i, 0)),
+            pl.BlockSpec((tj, 1), lambda j, i: (j, 0)),
+            pl.BlockSpec((ti, 1), lambda j, i: (i, 0)),
+            pl.BlockSpec((1, tj), lambda j, i: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tj), lambda j, i: (0, j)),
+            pl.BlockSpec((1, tj), lambda j, i: (0, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, t), jnp.float32),
+            jax.ShapeDtypeStruct((1, t), jnp.int32),
+        ],
+        interpret=interpret,
+    )(affinity, affinity, assign[:, None], assign[:, None], cur[:, None],
+      cur[None, :])
+    return out[0][0], out[1][0]

@@ -1,0 +1,376 @@
+"""Per-(arch x shape x mesh) dry-run cells: step function + ShapeDtypeStruct
+stand-ins + input shardings. No device allocation happens here — everything
+is abstract (the shannon/kernels pattern).
+
+Sharded dims that don't divide the mesh axis product are PADDED UP — all
+models use sentinel/mask semantics, so padding is semantically inert, and the
+dry-run only lowers+compiles anyway.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec, shapes_for
+from repro.data.graphs import TRIPLET_FACTOR, graphcast_sizes, sampled_sizes
+from repro.launch import mesh as mesh_lib
+from repro.models import build_defs, build_loss, gnn_out_dim
+from repro.models.act_sharding import with_policy
+from repro.models.param import abstract_params, partition_specs
+from repro.training.loop import make_train_step
+from repro.training.optimizer import AdamWConfig, abstract_opt_state, opt_specs
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    mode: str
+    fn: Callable
+    args: tuple
+    in_shardings: tuple
+    donate_argnums: tuple = ()
+    note: str = ""
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _pad_to(n: int, mesh, axes) -> int:
+    k = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    return -(-n // k) * k
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+OPT = AdamWConfig()
+
+
+# --------------------------------- LM ---------------------------------------
+
+
+def _lm_policy(cfg, mesh, b: int, rules, variants=()):
+    """Activation-sharding policy for the LM family (DESIGN.md §5)."""
+    bax = mesh_lib.batch_axes(mesh) if b > 1 else None
+    kvdiv = (cfg.n_kv_heads * cfg.hd) % mesh.shape["model"] == 0
+    ep_ax = rules.get("experts")
+    grouped = cfg.moe is not None and (cfg.moe.router == "awpm"
+                                       or cfg.moe.dispatch_groups > 1)
+    pol = {
+        "lm_act": P(bax, None, None),
+        "lm_qkv": P(bax, None, "model", None),
+        "lm_kv": P(bax, None, "model" if kvdiv else None, None),
+        "lm_logits": P(bax, None, "model"),
+        "mlp_hidden": {3: P(bax, None, "model"), 2: P(bax, "model")},
+        "moe_buf4": (P(bax, ep_ax, None, None) if grouped
+                     else P(None, ep_ax, "data", None)),
+    }
+    if "fsdp_gather" in variants:
+        pol["w_fsdp"] = {2: P(None, "model")}
+        pol["w_expert"] = {3: P(ep_ax, None, rules.get("expert_mlp"))}
+    return pol
+
+
+def _lm_cells(arch, cfg, shape: ShapeSpec, mesh, variants=()):
+    import dataclasses
+
+    from repro.models import transformer as T
+
+    gsz = next((int(v.split(":")[1]) for v in variants
+                if v.startswith("moe_ep:")), 2048)
+    if any(v.startswith("moe_ep") for v in variants) and cfg.moe is not None:
+        t_tokens = shape.d("global_batch") * (shape.d("seq_len")
+                                              if shape.mode != "decode" else 1)
+        groups = max(1, t_tokens // gsz)
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, dispatch_groups=groups))
+    if "loss_chunk" in variants:
+        cfg = dataclasses.replace(cfg, loss_chunks=8)
+    rules = mesh_lib.lm_param_rules(cfg, mesh, variants)
+    defs = build_defs(cfg)
+    aparams = abstract_params(defs)
+    pspecs = partition_specs(defs, rules)
+    batch_ax = mesh_lib.batch_axes(mesh)
+    all_ax = mesh_lib.all_axes(mesh)
+    s = shape.d("seq_len")
+    b = shape.d("global_batch")
+    pol = with_policy(mesh, _lm_policy(cfg, mesh, b, rules, variants))
+
+    if shape.mode == "train":
+        loss = build_loss(cfg)
+        step = pol(make_train_step(loss, OPT))
+        abatch = {
+            "tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+            "mask": _sds((b, s), jnp.float32),
+        }
+        bspec = {k: P(batch_ax, None) for k in abatch}
+        return Cell(arch, shape.name, "train", step,
+                    (aparams, abstract_opt_state(aparams), abatch),
+                    _ns(mesh, (pspecs, opt_specs(pspecs), bspec)),
+                    donate_argnums=(0, 1))
+
+    if shape.mode == "prefill":
+        fn = pol(functools.partial(_prefill_fn, cfg=cfg))
+        atok = _sds((b, s), jnp.int32)
+        return Cell(arch, shape.name, "prefill", fn, (aparams, atok),
+                    _ns(mesh, (pspecs, P(batch_ax, None))))
+
+    # decode: one new token against a seq-length-s KV cache
+    acache = T.cache_shapes(cfg, b, s)
+    if b == 1:
+        kv_spec = P(None, None, all_ax, None, None)  # SP: seq over all axes
+        tok_spec = P()
+        note = "long-context decode: KV sequence-sharded over ALL axes"
+    else:
+        kv_spec = P(None, batch_ax, "model", None, None)
+        tok_spec = P(batch_ax, None)
+        note = "decode: batch over data axes, KV seq over model"
+    cspec = jax.tree.map(lambda _: kv_spec, acache)
+    fn = pol(functools.partial(_decode_fn, cfg=cfg))
+    atok = _sds((b, 1), jnp.int32)
+    apos = _sds((), jnp.int32)
+    return Cell(arch, shape.name, "decode", fn,
+                (aparams, acache, atok, apos),
+                _ns(mesh, (pspecs, cspec, tok_spec, P())),
+                donate_argnums=(1,), note=note)
+
+
+def _prefill_fn(params, tokens, *, cfg):
+    from repro.models import transformer as T
+
+    return T.prefill(params, tokens, cfg)
+
+
+def _decode_fn(params, cache, token, pos, *, cfg):
+    from repro.models import transformer as T
+
+    return T.decode_step(params, cache, token, pos, cfg)
+
+
+# --------------------------------- GNN --------------------------------------
+
+
+def _gnn_sizes(shape: ShapeSpec):
+    if shape.name == "minibatch_lg":
+        n, e = sampled_sizes(shape.d("batch_nodes"),
+                             (shape.d("fanout1"), shape.d("fanout2")))
+        return n, e, shape.d("d_feat", 602)
+    if shape.name == "molecule":
+        bsz = shape.d("batch")
+        return shape.d("n_nodes") * bsz, shape.d("n_edges") * bsz, \
+            shape.d("d_feat", 16)
+    return shape.d("n_nodes"), shape.d("n_edges"), shape.d("d_feat", 100)
+
+
+def _gnn_cells(arch, cfg, shape: ShapeSpec, mesh, variants=()):
+    from repro.models.gnn.common import GraphBatch
+    from repro.models.gnn.graphcast import GraphCastBatch
+
+    fdt = jnp.bfloat16 if "gnn_bf16" in variants else jnp.float32
+    batch_ax = mesh_lib.batch_axes(mesh)
+    all_ax = mesh_lib.all_axes(mesh)
+    shard_ax = all_ax  # graph entities shard over every axis
+    rules = mesh_lib.gnn_param_rules(cfg, mesh)
+
+    if cfg.kind == "graphcast":
+        ng0, _, _ = _gnn_sizes(shape)
+        ng = _pad_to(ng0, mesh, shard_ax)
+        sz = graphcast_sizes(ng)
+        nm = _pad_to(sz["n_mesh"], mesh, shard_ax)
+        nv = cfg.opt("n_vars", 227)
+        sp = P(shard_ax)
+        ab = GraphCastBatch(
+            grid_feat=_sds((ng, nv), jnp.float32),
+            g2m_src=_sds((_pad_to(sz["e_g2m"], mesh, shard_ax),), jnp.int32),
+            g2m_dst=_sds((_pad_to(sz["e_g2m"], mesh, shard_ax),), jnp.int32),
+            mesh_src=_sds((_pad_to(sz["e_mesh"], mesh, shard_ax),), jnp.int32),
+            mesh_dst=_sds((_pad_to(sz["e_mesh"], mesh, shard_ax),), jnp.int32),
+            m2g_src=_sds((_pad_to(sz["e_m2g"], mesh, shard_ax),), jnp.int32),
+            m2g_dst=_sds((_pad_to(sz["e_m2g"], mesh, shard_ax),), jnp.int32),
+            target=_sds((ng, nv), jnp.float32),
+            n_mesh=nm,
+        )
+        bspec = GraphCastBatch(
+            grid_feat=P(shard_ax, None), g2m_src=sp, g2m_dst=sp, mesh_src=sp,
+            mesh_dst=sp, m2g_src=sp, m2g_dst=sp, target=P(shard_ax, None),
+            n_mesh=nm,
+        )
+    else:
+        n0, e0, d_feat = _gnn_sizes(shape)
+        n = _pad_to(n0, mesh, shard_ax)
+        e = _pad_to(e0, mesh, shard_ax)
+        coords = cfg.kind in ("dimenet", "equiformer_v2")
+        n_graphs = shape.d("batch", 1)
+        n_out = gnn_out_dim(shape.name)
+        labels = (_sds((n_graphs, 1), jnp.float32) if n_out == 1
+                  else _sds((n,), jnp.int32))
+        tri = None
+        if cfg.kind == "dimenet":
+            pcap = _pad_to(TRIPLET_FACTOR * e, mesh, shard_ax)
+            tri = (_sds((pcap,), jnp.int32), _sds((pcap,), jnp.int32))
+        ab = GraphBatch(
+            node_feat=_sds((n, d_feat), fdt),
+            edge_src=_sds((e,), jnp.int32),
+            edge_dst=_sds((e,), jnp.int32),
+            labels=labels,
+            coords=_sds((n, 3), fdt) if coords else None,
+            graph_id=_sds((n,), jnp.int32) if n_graphs > 1 else None,
+            triplets=tri,
+            n_graphs=n_graphs,
+        )
+        sp = P(shard_ax)
+        bspec = GraphBatch(
+            node_feat=P(shard_ax, None), edge_src=sp, edge_dst=sp,
+            labels=(P(None, None) if n_out == 1 else sp),
+            coords=P(shard_ax, None) if coords else None,
+            graph_id=sp if n_graphs > 1 else None,
+            triplets=(sp, sp) if tri is not None else None,
+            n_graphs=n_graphs,
+        )
+
+    defs = build_defs(cfg, shape)
+    aparams = abstract_params(defs)
+    pspecs = partition_specs(defs, rules)
+    loss = build_loss(cfg)
+    gpol = {
+        "nodes": P(shard_ax, None), "nodes3": P(shard_ax, None, None),
+        "edges": P(shard_ax, None), "edges3": P(shard_ax, None, None),
+    }
+    step = with_policy(mesh, gpol)(make_train_step(loss, OPT))
+    return Cell(arch, shape.name, "train", step,
+                (aparams, abstract_opt_state(aparams), ab),
+                _ns(mesh, (pspecs, opt_specs(pspecs), bspec)),
+                donate_argnums=(0, 1))
+
+
+# -------------------------------- RecSys ------------------------------------
+
+
+def _recsys_cells(arch, cfg, shape: ShapeSpec, mesh):
+    from repro.models.recsys import bert4rec
+
+    rules = mesh_lib.recsys_param_rules(cfg, mesh)
+    defs = build_defs(cfg)
+    aparams = abstract_params(defs)
+    pspecs = partition_specs(defs, rules)
+    all_ax = mesh_lib.all_axes(mesh)
+    b = _pad_to(shape.d("batch"), mesh, all_ax)
+    sl = cfg.seq_len
+    pol = with_policy(mesh, {"rec_act": P(all_ax, None, None)})
+
+    if shape.mode == "train":
+        loss = build_loss(cfg)
+        step = pol(make_train_step(loss, OPT))
+        ab = {
+            "item_seq": _sds((b, sl), jnp.int32),
+            "labels": _sds((b, sl), jnp.int32),
+            "mask": _sds((b, sl), jnp.float32),
+        }
+        bspec = {k: P(all_ax, None) for k in ab}
+        return Cell(arch, shape.name, "train", step,
+                    (aparams, abstract_opt_state(aparams), ab),
+                    _ns(mesh, (pspecs, opt_specs(pspecs), bspec)),
+                    donate_argnums=(0, 1))
+
+    if shape.mode == "serve":
+        fn = pol(functools.partial(_serve_fn, cfg=cfg))
+        aseq = _sds((b, sl), jnp.int32)
+        return Cell(arch, shape.name, "serve", fn, (aparams, aseq),
+                    _ns(mesh, (pspecs, P(all_ax, None))))
+
+    # retrieval: 1 user x 1M candidates (batched dot, candidate-sharded)
+    nc = _pad_to(shape.d("n_candidates"), mesh, all_ax)
+    fn = functools.partial(_retrieval_fn, cfg=cfg)
+    aseq = _sds((shape.d("batch"), sl), jnp.int32)
+    acand = _sds((nc,), jnp.int32)
+    return Cell(arch, shape.name, "retrieval", fn, (aparams, aseq, acand),
+                _ns(mesh, (pspecs, P(None, None), P(all_ax))))
+
+
+def _serve_fn(params, seq, *, cfg):
+    from repro.models.recsys import bert4rec
+
+    return bert4rec.serve_scores(params, seq, cfg)
+
+
+def _retrieval_fn(params, seq, cands, *, cfg):
+    from repro.models.recsys import bert4rec
+
+    return bert4rec.retrieval_scores(params, seq, cands, cfg)
+
+
+# ------------------------------- Matching -----------------------------------
+
+
+def _matching_cells(arch, cfg, shape: ShapeSpec, mesh, packed: bool = False):
+    from repro.core.dist import GridSpec, default_caps, make_dist_awac
+    from repro.core.single import MatchState
+
+    row_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    spec = GridSpec(mesh, row_axes, "model")
+    n = shape.d("n")
+    m = int(n * shape.d("avg_degree"))
+    cap = _pad_to(int(1.5 * m / (spec.pr * spec.pc)) + 64, mesh, ())
+    caps = default_caps(n, m, spec.pr, spec.pc, slack=cfg.a2a_slack)
+    run = make_dist_awac(spec, n, cap, caps, max_iter=cfg.max_iter,
+                         packed=packed)
+    blk = _sds((spec.pr, spec.pc, cap), jnp.int32)
+    blkf = _sds((spec.pr, spec.pc, cap), jnp.float32)
+    astate = MatchState(
+        _sds((n + 1,), jnp.int32), _sds((n + 1,), jnp.int32),
+        _sds((n + 1,), jnp.float32), _sds((n + 1,), jnp.float32),
+    )
+    bs = NamedSharding(mesh, spec.block_spec())
+    rep = NamedSharding(mesh, P())
+    # run is already jitted; expose the underlying callable + shardings
+    return Cell(arch, shape.name, "match", run, (blk, blk, blkf, astate),
+                (bs, bs, bs, MatchState(rep, rep, rep, rep)),
+                note=f"AWAC distributed rounds, n={n}, m~{m}, cap/blk={cap}")
+
+
+# --------------------------------- entry ------------------------------------
+
+
+def build_cell(arch: str, shape_name: str, mesh, router: str | None = None,
+               cfg_override=None, variants: tuple = ()):
+    cfg = cfg_override or get_config(arch)
+    if cfg_override is None and cfg.family == "lm" and cfg.moe is not None \
+            and router:
+        cfg = get_config(arch, router=router)
+    if "escn_sub" in variants and cfg.family == "gnn" \
+            and cfg.kind == "equiformer_v2":
+        import dataclasses
+
+        cfg = dataclasses.replace(
+            cfg, extra=cfg.extra + (("escn_subspace", True),))
+    shape = next(s for s in shapes_for(cfg) if s.name == shape_name)
+    fam = cfg.family
+    if fam == "lm":
+        return _lm_cells(arch, cfg, shape, mesh, variants)
+    if fam == "gnn":
+        return _gnn_cells(arch, cfg, shape, mesh, variants)
+    if fam == "recsys":
+        return _recsys_cells(arch, cfg, shape, mesh)
+    if fam == "matching":
+        return _matching_cells(arch, cfg, shape, mesh,
+                               packed=("packed_a2a" in variants))
+    raise ValueError(fam)
+
+
+def all_cells(arch: str):
+    cfg = get_config(arch)
+    return [s.name for s in shapes_for(cfg)]

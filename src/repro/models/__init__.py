@@ -1,0 +1,67 @@
+"""Model facade: config -> (param defs, loss fn) for every architecture
+family. Used by smoke tests, the trainer, and the dry-run launcher."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ShapeSpec
+
+# per-shape output dims for GNN node classification (dataset conventions:
+# cora=7, reddit=41, ogbn-products=47, molecule=regression)
+GNN_OUT = {"full_graph_sm": 7, "minibatch_lg": 41, "ogb_products": 47,
+           "molecule": 1}
+
+
+def gnn_module(kind: str):
+    return importlib.import_module(f"repro.models.gnn.{kind}")
+
+
+def gnn_out_dim(shape_name: str) -> int:
+    return GNN_OUT.get(shape_name, 7)
+
+
+def build_defs(cfg, shape: ShapeSpec | None = None):
+    """Parameter definitions for (cfg, shape). LM/recsys defs are
+    shape-independent; GNN defs need the input feature dim + output size."""
+    fam = cfg.family
+    if fam == "lm":
+        from repro.models import transformer
+
+        return transformer.lm_def(cfg)
+    if fam == "recsys":
+        from repro.models.recsys import bert4rec
+
+        return bert4rec.bert4rec_def(cfg)
+    if fam == "gnn":
+        assert shape is not None, "GNN defs depend on the shape cell"
+        d_feat = shape.d("d_feat", 16)
+        if cfg.kind == "graphcast":
+            from repro.models.gnn import graphcast
+
+            return graphcast.graphcast_def(cfg, cfg.opt("n_vars", 227))
+        mod = gnn_module(cfg.kind)
+        n_out = gnn_out_dim(shape.name)
+        if cfg.kind == "graphsage":
+            return mod.graphsage_def(cfg, d_feat, n_out)
+        if cfg.kind == "dimenet":
+            return mod.dimenet_def(cfg, d_feat, n_out)
+        if cfg.kind == "equiformer_v2":
+            return mod.equiformer_def(cfg, d_feat, n_out)
+    raise ValueError(f"unknown family {fam}")
+
+
+def build_loss(cfg):
+    """(params, batch) -> (loss, aux). Batch type is family-specific."""
+    fam = cfg.family
+    if fam == "lm":
+        from repro.models import transformer
+
+        return lambda p, b: transformer.loss_fn(p, b, cfg)
+    if fam == "recsys":
+        from repro.models.recsys import bert4rec
+
+        return lambda p, b: bert4rec.loss_fn(p, b, cfg)
+    if fam == "gnn":
+        mod = gnn_module(cfg.kind)
+        return lambda p, b: mod.loss_fn(p, b, cfg)
+    raise ValueError(fam)

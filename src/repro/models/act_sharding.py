@@ -1,0 +1,64 @@
+"""Activation-sharding constraint policy.
+
+Model code calls ``constrain(x, key)`` at well-known points; the launcher
+installs a per-family policy (key -> PartitionSpec) during tracing. Without a
+policy (smoke tests, single device) it's a no-op. This is what keeps XLA's
+sharding propagation honest — without the constraints GSPMD can (and did, see
+EXPERIMENTS.md §Perf iteration 1) replicate the batch dimension of attention
+scores across the mesh.
+
+Keys:
+  lm_act        [B, S, d]       transformer residual stream
+  lm_qkv        [B, S, H, D]    per-head projections
+  lm_logits     [B, S, V] / [B, V]
+  mlp_hidden    [..., ff]       FFN hidden
+  moe_buf       [E, C, d]       expert dispatch buffers
+  nodes         [N, ...]        GNN node states
+  edges         [E, ...]        GNN edge messages
+  rec_act       [B, S, d]       bert4rec stream
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_tls = threading.local()
+
+
+@contextlib.contextmanager
+def policy(mesh, mapping: dict):
+    prev = getattr(_tls, "policy", None)
+    _tls.policy = (mesh, mapping)
+    try:
+        yield
+    finally:
+        _tls.policy = prev
+
+
+def with_policy(mesh, mapping: dict):
+    """Wrap fn so the policy is active while it is traced."""
+
+    def deco(fn):
+        def wrapped(*a, **k):
+            with policy(mesh, mapping):
+                return fn(*a, **k)
+
+        return wrapped
+
+    return deco
+
+
+def constrain(x, key: str):
+    pol = getattr(_tls, "policy", None)
+    if pol is None:
+        return x
+    mesh, mapping = pol
+    spec = mapping.get(key)
+    if isinstance(spec, dict):  # rank-dispatched specs (e.g. mlp_hidden 2D/3D)
+        spec = spec.get(x.ndim)
+    if spec is None:
+        return x
+    ns = jax.sharding.NamedSharding(mesh, spec)
+    return jax.lax.with_sharding_constraint(x, ns)

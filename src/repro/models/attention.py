@@ -1,0 +1,81 @@
+"""GQA attention with RoPE, QKV bias (Qwen-style), KV cache, and a decode path
+designed for sharded caches (sequence parallelism at 32k-500k KV lengths).
+
+Train/prefill attention dispatches to the flash Pallas kernel or the jnp
+reference (cfg.attention_impl); decode is pure jnp — a 1-token query against
+a [B, S, Hkv, D] cache lowers to a reduction XLA distributes over the
+sequence-sharded cache (flash-decoding-style two-pass softmax comes out of
+the sharded logsumexp automatically).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import attention as flash_or_ref
+from repro.models.act_sharding import constrain
+from repro.models.layers import dense, dense_def, rope
+from repro.models.param import ParamDef
+
+
+def attention_def(cfg):
+    d, hd = cfg.d_model, cfg.hd
+    return {
+        "q": dense_def(d, cfg.n_heads * hd, ("embed", "heads"), bias=cfg.qkv_bias,
+                       bias_axis="heads"),
+        "k": dense_def(d, cfg.n_kv_heads * hd, ("embed", "kv_heads"),
+                       bias=cfg.qkv_bias, bias_axis="kv_heads"),
+        "v": dense_def(d, cfg.n_kv_heads * hd, ("embed", "kv_heads"),
+                       bias=cfg.qkv_bias, bias_axis="kv_heads"),
+        "o": dense_def(cfg.n_heads * hd, d, ("heads", "embed")),
+    }
+
+
+def _qkv(p, x, positions, cfg):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = constrain(dense(p["q"], x).reshape(b, s, cfg.n_heads, hd), "lm_qkv")
+    k = constrain(dense(p["k"], x).reshape(b, s, cfg.n_kv_heads, hd), "lm_kv")
+    v = constrain(dense(p["v"], x).reshape(b, s, cfg.n_kv_heads, hd), "lm_kv")
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def self_attention(p, x, positions, cfg):
+    """Causal self-attention for train/prefill. x [B, S, d]."""
+    q, k, v = _qkv(p, x, positions, cfg)
+    o = flash_or_ref(q, k, v, causal=True,
+                     use_kernel=(cfg.attention_impl == "pallas"))
+    b, s, _ = x.shape
+    o = constrain(o, "lm_qkv")
+    return dense(p["o"], o.reshape(b, s, cfg.n_heads * cfg.hd)), (k, v)
+
+
+def decode_attention(p, x1, k_cache, v_cache, pos, cfg):
+    """One decode step. x1 [B, 1, d]; caches [B, S_max, Hkv, D]; pos scalar
+    (current length). Returns (out [B, 1, d], k_new, v_new) where k/v_new are
+    the single-position entries to insert at ``pos``."""
+    b = x1.shape[0]
+    hd = cfg.hd
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k1, v1 = _qkv(p, x1, positions, cfg)
+    group = cfg.n_heads // cfg.n_kv_heads
+    # fold new kv into the score against the cache by treating it as cache[pos]
+    kc = jax.lax.dynamic_update_slice(k_cache, k1.astype(k_cache.dtype),
+                                      (0, pos, 0, 0))
+    vc = jax.lax.dynamic_update_slice(v_cache, v1.astype(v_cache.dtype),
+                                      (0, pos, 0, 0))
+    qh = q.reshape(b, cfg.n_kv_heads, group, hd)  # [B, Hkv, G, D] (S=1 folded)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qh.astype(jnp.float32),
+                        kc.astype(jnp.float32)) / (hd ** 0.5)
+    valid = (jnp.arange(kc.shape[1]) <= pos)[None, None, None, :]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    pexp = jnp.exp(scores - m)
+    l = jnp.sum(pexp, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgs,bskd->bkgd", pexp, vc.astype(jnp.float32)) / jnp.maximum(
+        l, 1e-30
+    )
+    o = o.reshape(b, 1, cfg.n_heads * hd).astype(x1.dtype)
+    return dense(p["o"], o), kc, vc

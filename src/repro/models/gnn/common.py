@@ -1,0 +1,134 @@
+"""GNN substrate: GraphBatch, message passing (segment ops — JAX has no
+sparse message passing; built here per the brief), radial/spherical bases.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense, dense_def
+from repro.models.param import ParamDef, dense_init
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GraphBatch:
+    """Generic padded graph. Edge padding: src = dst = n_nodes (sentinel row
+    dropped by segment ops). ``graph_id`` batches small graphs (molecule
+    shape); None for single graphs. ``n_graphs`` is static metadata."""
+
+    node_feat: jnp.ndarray  # [N, F]
+    edge_src: jnp.ndarray  # [E] int32
+    edge_dst: jnp.ndarray  # [E] int32
+    labels: jnp.ndarray  # [N] int32 (node class) or [G, n_out] f32
+    coords: jnp.ndarray | None = None  # [N, 3]
+    graph_id: jnp.ndarray | None = None  # [N] int32 graph membership
+    triplets: tuple | None = None  # (edge_kj [P], edge_ji [P]) int32
+    n_graphs: int = dataclasses.field(default=1, metadata=dict(static=True))
+
+
+def aggregate(messages, dst, n_nodes, op="sum"):
+    """Scatter-aggregate messages [E, F] to nodes by dst (sentinel = n_nodes)."""
+    if op == "sum":
+        out = jax.ops.segment_sum(messages, dst, num_segments=n_nodes + 1)
+    elif op == "mean":
+        s = jax.ops.segment_sum(messages, dst, num_segments=n_nodes + 1)
+        cnt = jax.ops.segment_sum(jnp.ones((messages.shape[0], 1), messages.dtype),
+                                  dst, num_segments=n_nodes + 1)
+        out = s / jnp.maximum(cnt, 1.0)
+    elif op == "max":
+        out = jax.ops.segment_max(messages, dst, num_segments=n_nodes + 1)
+        out = jnp.where(jnp.isneginf(out), 0.0, out)
+    else:
+        raise ValueError(op)
+    return out[:n_nodes]
+
+
+def mlp2_def(d_in, d_hidden, d_out, axes=("embed", "mlp")):
+    return {
+        "l1": dense_def(d_in, d_hidden, axes, bias=True, bias_axis="mlp"),
+        "l2": dense_def(d_hidden, d_out, (axes[1], axes[0]), bias=True,
+                        bias_axis="embed"),
+    }
+
+
+def mlp2(p, x, act=jax.nn.silu):
+    return dense(p["l2"], act(dense(p["l1"], x)))
+
+
+def radial_basis(dist, n_radial: int, cutoff: float = 5.0):
+    """DimeNet-style sine radial basis: sin(n pi d / c) / d."""
+    n = jnp.arange(1, n_radial + 1, dtype=jnp.float32)
+    d = jnp.maximum(dist[..., None], 1e-6)
+    return jnp.sin(n * jnp.pi * d / cutoff) / d * jnp.sqrt(2.0 / cutoff)
+
+
+def _legendre_all(ct, l_max: int):
+    """Associated Legendre P_l^m(ct) for 0<=m<=l<=l_max via stable recurrences.
+    Returns list P[l][m] of arrays shaped like ct."""
+    st = jnp.sqrt(jnp.maximum(1.0 - ct * ct, 0.0))
+    P = [[None] * (l_max + 1) for _ in range(l_max + 1)]
+    P[0][0] = jnp.ones_like(ct)
+    for m in range(1, l_max + 1):
+        P[m][m] = -(2 * m - 1) * st * P[m - 1][m - 1]
+    for m in range(l_max):
+        P[m + 1][m] = (2 * m + 1) * ct * P[m][m]
+    for m in range(l_max + 1):
+        for l in range(m + 2, l_max + 1):
+            P[l][m] = ((2 * l - 1) * ct * P[l - 1][m]
+                       - (l + m - 1) * P[l - 2][m]) / (l - m)
+    return P
+
+
+def real_spherical_harmonics(vec, l_max: int):
+    """Real SH Y_lm of unit-normalized vec [..., 3] up to l_max.
+    Returns [..., (l_max+1)^2] ordered (l, m) with m in [-l..l]."""
+    import math
+
+    v = vec / jnp.maximum(jnp.linalg.norm(vec, axis=-1, keepdims=True), 1e-9)
+    x, y, z = v[..., 0], v[..., 1], v[..., 2]
+    ct = z
+    phi = jnp.arctan2(y, x)
+    P = _legendre_all(ct, l_max)
+    out = []
+    for l in range(l_max + 1):
+        for m in range(-l, l + 1):
+            am = abs(m)
+            norm = math.sqrt(
+                (2 * l + 1) / (4 * math.pi)
+                * math.factorial(l - am) / math.factorial(l + am)
+            )
+            if m == 0:
+                out.append(norm * P[l][0])
+            elif m > 0:
+                out.append(math.sqrt(2.0) * norm * P[l][am] * jnp.cos(am * phi))
+            else:
+                out.append(math.sqrt(2.0) * norm * P[l][am] * jnp.sin(am * phi))
+    return jnp.stack(out, axis=-1)
+
+
+def node_or_graph_loss(out, gb: GraphBatch):
+    """Shared head: int labels -> per-node classification; float labels ->
+    per-graph pooled regression (molecule shape)."""
+    from repro.models.layers import softmax_xent
+
+    if jnp.issubdtype(gb.labels.dtype, jnp.integer):
+        return softmax_xent(out, gb.labels), out
+    gid = gb.graph_id if gb.graph_id is not None else jnp.zeros(
+        (out.shape[0],), jnp.int32)
+    pred = jax.ops.segment_sum(out, gid, num_segments=gb.n_graphs)
+    tgt = gb.labels.astype(jnp.float32).reshape(pred.shape)
+    return jnp.mean((pred - tgt) ** 2), pred
+
+
+def sh_degree_index(l_max: int):
+    """Per-component degree l and order m arrays of length (l_max+1)^2."""
+    ls, ms = [], []
+    for l in range(l_max + 1):
+        for m in range(-l, l + 1):
+            ls.append(l)
+            ms.append(m)
+    return np.array(ls, np.int32), np.array(ms, np.int32)

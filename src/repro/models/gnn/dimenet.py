@@ -1,0 +1,116 @@
+"""DimeNet (arXiv:2003.03123): directional message passing with angular
+(triplet) features. Structure: RBF edge embedding -> n_blocks interaction
+blocks (triplet gather + spherical-radial bilinear layer) -> per-block output
+heads summed -> per-graph energy.
+
+Triplets (k->j, j->i) index into the EDGE list (precomputed by the data
+pipeline with a fixed capacity; padding index = n_edges)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.act_sharding import constrain
+from repro.models.gnn.common import GraphBatch, mlp2, mlp2_def, radial_basis
+from repro.models.layers import dense, dense_def
+from repro.models.param import ParamDef, dense_init
+
+
+def dimenet_def(cfg, d_in: int, n_out: int = 1):
+    d = cfg.d_hidden
+    n_rad = cfg.opt("n_radial", 6)
+    n_sph = cfg.opt("n_spherical", 7)
+    n_bil = cfg.opt("n_bilinear", 8)
+    blocks = []
+    for _ in range(cfg.n_layers):
+        blocks.append({
+            "msg": mlp2_def(d, d, d),
+            "rbf_proj": dense_def(n_rad, d, (None, "mlp")),
+            "sbf_proj": dense_def(n_sph * n_rad, n_bil, (None, None)),
+            "bilinear": ParamDef((n_bil, d, d), dense_init(d), (None, "embed", "mlp")),
+            "update": mlp2_def(d, d, d),
+            "out": mlp2_def(d, d, n_out),
+        })
+    return {
+        "embed_node": dense_def(d_in, d, ("embed", "mlp"), bias=True,
+                                bias_axis="mlp"),
+        "embed_edge": dense_def(2 * d + cfg.opt("n_radial", 6), d,
+                                (None, "mlp"), bias=True, bias_axis="mlp"),
+        "blocks": blocks,
+    }
+
+
+def _angles(gb: GraphBatch):
+    """cos(angle) at triplets (k->j, j->i) + distances."""
+    n = gb.node_feat.shape[0]
+    e = gb.edge_src.shape[0]
+    src = jnp.clip(gb.edge_src, 0, n - 1)
+    dst = jnp.clip(gb.edge_dst, 0, n - 1)
+    vec = jnp.take(gb.coords, dst, axis=0) - jnp.take(gb.coords, src, axis=0)
+    dist = jnp.linalg.norm(vec, axis=-1)
+    t_kj, t_ji = gb.triplets
+    tk = jnp.clip(t_kj, 0, e - 1)
+    tj = jnp.clip(t_ji, 0, e - 1)
+    v1 = -jnp.take(vec, tk, axis=0)  # j -> k
+    v2 = jnp.take(vec, tj, axis=0)  # j -> i
+    cos = jnp.sum(v1 * v2, -1) / jnp.maximum(
+        jnp.linalg.norm(v1, axis=-1) * jnp.linalg.norm(v2, axis=-1), 1e-6
+    )
+    return dist, cos
+
+
+def _sbf(cos, dist_kj, n_sph, n_rad, cutoff=5.0):
+    """Spherical-radial basis: Chebyshev-in-angle x sine-in-distance."""
+    ang = jnp.arccos(jnp.clip(cos, -1.0, 1.0))
+    sph = jnp.cos(ang[:, None] * jnp.arange(n_sph, dtype=jnp.float32))
+    rad = radial_basis(dist_kj, n_rad, cutoff)
+    return (sph[:, :, None] * rad[:, None, :]).reshape(cos.shape[0], -1)
+
+
+def apply(params, gb: GraphBatch, cfg):
+    """Returns per-graph predictions [n_graphs, n_out]."""
+    n = gb.node_feat.shape[0]
+    e = gb.edge_src.shape[0]
+    n_rad = cfg.opt("n_radial", 6)
+    n_sph = cfg.opt("n_spherical", 7)
+    src = jnp.clip(gb.edge_src, 0, n - 1)
+    dst = jnp.clip(gb.edge_dst, 0, n - 1)
+    edge_valid = (gb.edge_src < n)[:, None].astype(gb.node_feat.dtype)
+    dist, cos = _angles(gb)
+    rbf = radial_basis(dist, n_rad)
+    h = jax.nn.silu(dense(params["embed_node"], gb.node_feat))
+    m = jax.nn.silu(dense(params["embed_edge"], jnp.concatenate(
+        [jnp.take(h, src, 0), jnp.take(h, dst, 0), rbf], axis=-1))) * edge_valid
+
+    t_kj, t_ji = gb.triplets
+    t_valid = (t_kj < e) & (t_ji < e)
+    tk = jnp.clip(t_kj, 0, e - 1)
+    tj = jnp.clip(t_ji, 0, e - 1)
+    sbf = _sbf(cos, jnp.take(dist, tk), n_sph, n_rad)
+    sbf = jnp.where(t_valid[:, None], sbf, 0.0)
+
+    out_sum = None
+    for bp in params["blocks"]:
+        # triplet messages: m_kj gathered to each (kj, ji) pair
+        m_kj = jnp.take(mlp2(bp["msg"], m), tk, axis=0)
+        w = dense(bp["sbf_proj"], sbf)  # [P, n_bilinear]
+        tri = jnp.einsum("pb,bdf,pd->pf", w, bp["bilinear"], m_kj)
+        agg = jax.ops.segment_sum(
+            jnp.where(t_valid[:, None], tri, 0.0),
+            jnp.where(t_valid, tj, e), num_segments=e + 1)[:e]
+        m = constrain(m + jax.nn.silu(
+            mlp2(bp["update"], m + agg) + dense(bp["rbf_proj"], rbf))
+            * edge_valid, "edges")
+        # per-block output: edges -> nodes -> graph
+        node_out = jax.ops.segment_sum(mlp2(bp["out"], m), jnp.where(
+            gb.edge_src < n, dst, n), num_segments=n + 1)[:n]
+        out_sum = node_out if out_sum is None else out_sum + node_out
+
+    return out_sum  # [N, n_out] per-node outputs
+
+
+def loss_fn(params, gb: GraphBatch, cfg):
+    from repro.models.gnn.common import node_or_graph_loss
+
+    out = apply(params, gb, cfg)
+    return node_or_graph_loss(out, gb)

@@ -1,0 +1,85 @@
+"""GraphCast (arXiv:2212.12794): encoder-processor-decoder mesh GNN.
+
+Grid nodes (n_vars=227 features) -> encoder over grid2mesh edges -> 16
+processor message-passing layers on the (refined icosahedral, here: coarse
+synthetic) mesh -> decoder over mesh2grid edges -> per-grid-node delta of all
+variables. Node/edge MLPs with residuals and sum aggregation, as in the
+paper. Mesh topology is supplied by the data pipeline (sizes derive from
+mesh_refinement; see data/graphs.py)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.act_sharding import constrain
+from repro.models.gnn.common import aggregate, mlp2, mlp2_def
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class GraphCastBatch:
+    grid_feat: jnp.ndarray  # [Ng, n_vars]
+    g2m_src: jnp.ndarray  # [E1] grid idx
+    g2m_dst: jnp.ndarray  # [E1] mesh idx
+    mesh_src: jnp.ndarray  # [Em]
+    mesh_dst: jnp.ndarray  # [Em]
+    m2g_src: jnp.ndarray  # [E2] mesh idx
+    m2g_dst: jnp.ndarray  # [E2] grid idx
+    target: jnp.ndarray  # [Ng, n_vars]
+    n_mesh: int = dataclasses.field(default=4, metadata=dict(static=True))
+
+
+def graphcast_def(cfg, n_vars: int):
+    d = cfg.d_hidden
+    proc = [{"edge": mlp2_def(3 * d, d, d), "node": mlp2_def(2 * d, d, d)}
+            for _ in range(cfg.n_layers)]
+    return {
+        "grid_embed": mlp2_def(n_vars, d, d),
+        "g2m_edge": mlp2_def(d, d, d),
+        "mesh_node_enc": mlp2_def(d, d, d),
+        "proc": proc,
+        "m2g_edge": mlp2_def(d, d, d),
+        "grid_dec": mlp2_def(2 * d, d, n_vars),
+    }
+
+
+def apply(params, gb: GraphCastBatch, cfg):
+    ng = gb.grid_feat.shape[0]
+    nm = gb.n_mesh
+    hg = mlp2(params["grid_embed"], gb.grid_feat)  # [Ng, d]
+
+    # ---- encoder: grid -> mesh
+    e1s = jnp.clip(gb.g2m_src, 0, ng - 1)
+    msg = mlp2(params["g2m_edge"], jnp.take(hg, e1s, 0))
+    msg = msg * (gb.g2m_src < ng)[:, None].astype(msg.dtype)
+    hm = aggregate(msg, jnp.where(gb.g2m_src < ng, gb.g2m_dst, nm), nm, "sum")
+    hm = mlp2(params["mesh_node_enc"], hm)
+
+    # ---- processor: message passing on the mesh (residual)
+    for lp in params["proc"]:
+        es = jnp.clip(gb.mesh_src, 0, nm - 1)
+        ed = jnp.clip(gb.mesh_dst, 0, nm - 1)
+        em = mlp2(lp["edge"], jnp.concatenate(
+            [jnp.take(hm, es, 0), jnp.take(hm, ed, 0),
+             jnp.take(hm, es, 0) - jnp.take(hm, ed, 0)], axis=-1))
+        em = em * (gb.mesh_src < nm)[:, None].astype(em.dtype)
+        agg = aggregate(em, jnp.where(gb.mesh_src < nm, gb.mesh_dst, nm), nm,
+                        "sum")
+        hm = constrain(
+            hm + mlp2(lp["node"], jnp.concatenate([hm, agg], axis=-1)),
+            "nodes")
+
+    # ---- decoder: mesh -> grid
+    e2s = jnp.clip(gb.m2g_src, 0, nm - 1)
+    dm = mlp2(params["m2g_edge"], jnp.take(hm, e2s, 0))
+    dm = dm * (gb.m2g_src < nm)[:, None].astype(dm.dtype)
+    hg2 = aggregate(dm, jnp.where(gb.m2g_src < nm, gb.m2g_dst, ng), ng, "sum")
+    delta = mlp2(params["grid_dec"], jnp.concatenate([hg, hg2], axis=-1))
+    return gb.grid_feat + delta  # next-state prediction
+
+
+def loss_fn(params, gb: GraphCastBatch, cfg):
+    pred = apply(params, gb, cfg)
+    return jnp.mean((pred - gb.target) ** 2), pred

@@ -1,0 +1,46 @@
+"""GraphSAGE (arXiv:1706.02216): mean aggregator, 2 layers, L2-normalized
+hidden states. Works on full graphs and on sampled blocks (minibatch_lg)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.act_sharding import constrain
+from repro.models.gnn.common import GraphBatch, aggregate, node_or_graph_loss
+from repro.models.layers import dense, dense_def, softmax_xent
+
+
+def graphsage_def(cfg, d_in: int, n_classes: int):
+    d = cfg.d_hidden
+    layers = []
+    din = d_in
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "self": dense_def(din, d, ("embed", "mlp"), bias=True, bias_axis="mlp"),
+            "neigh": dense_def(din, d, ("embed", "mlp"), bias=False),
+        })
+        din = d
+    return {"layers": layers,
+            "out": dense_def(d, n_classes, ("mlp", None), bias=True,
+                             bias_axis=None)}
+
+
+def apply(params, gb: GraphBatch, cfg):
+    n = gb.node_feat.shape[0]
+    h = gb.node_feat
+    for lp in params["layers"]:
+        neigh = aggregate(jnp.take(h, jnp.clip(gb.edge_src, 0, n - 1), axis=0)
+                          * (gb.edge_src < n)[:, None].astype(h.dtype),
+                          gb.edge_dst, n, op="mean")
+        h = jax.nn.relu(dense(lp["self"], h) + dense(lp["neigh"], neigh))
+        h = constrain(
+            h / jnp.maximum(jnp.linalg.norm(h, axis=-1, keepdims=True), 1e-6),
+            "nodes")
+    return dense(params["out"], h)  # [N, n_classes]
+
+
+def loss_fn(params, gb: GraphBatch, cfg, mask=None):
+    logits = apply(params, gb, cfg)
+    if mask is not None and jnp.issubdtype(gb.labels.dtype, jnp.integer):
+        return softmax_xent(logits, gb.labels, mask), logits
+    return node_or_graph_loss(logits, gb)

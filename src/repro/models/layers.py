@@ -1,0 +1,118 @@
+"""Shared neural layers (pure functions over ParamDef trees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef, dense_init, ones_init, zeros_init
+
+
+# ----------------------------- norms ---------------------------------------
+
+
+def rmsnorm_def(d, axes=("embed",)):
+    return {"scale": ParamDef((d,), ones_init(), axes)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+def layernorm_def(d, axes=("embed",)):
+    return {"scale": ParamDef((d,), ones_init(), axes),
+            "bias": ParamDef((d,), zeros_init(), axes)}
+
+
+def layernorm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ----------------------------- dense ----------------------------------------
+
+
+def dense_def(d_in, d_out, axes, bias=False, bias_axis=None):
+    d = {"w": ParamDef((d_in, d_out), dense_init(d_in), axes)}
+    if bias:
+        d["b"] = ParamDef((d_out,), zeros_init(), (bias_axis,))
+    return d
+
+
+def dense(p, x):
+    from repro.models.act_sharding import constrain
+
+    # "w_fsdp" (policy-gated): all-gather the bf16-cast weight over the FSDP
+    # axis at use, instead of letting GSPMD all-reduce activations when
+    # contracting over the sharded dim (§Perf iteration L1).
+    w = constrain(p["w"].astype(x.dtype), "w_fsdp")
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def mlp_def(d, hidden, axes_in=("embed", "mlp"), axes_out=("mlp", "embed"),
+            bias=False):
+    """SwiGLU MLP (gate/up/down), the Qwen2/LLaMA FFN."""
+    return {
+        "gate": dense_def(d, hidden, axes_in, bias=bias, bias_axis="mlp"),
+        "up": dense_def(d, hidden, axes_in, bias=bias, bias_axis="mlp"),
+        "down": dense_def(hidden, d, axes_out, bias=bias, bias_axis="embed"),
+    }
+
+
+def mlp(p, x):
+    from repro.models.act_sharding import constrain
+
+    h = constrain(jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x),
+                  "mlp_hidden")
+    return dense(p["down"], h)
+
+
+def gelu_mlp_def(d, hidden, axes_in=("embed", "mlp"), axes_out=("mlp", "embed")):
+    """GELU MLP with biases (BERT-style, used by bert4rec)."""
+    return {
+        "up": dense_def(d, hidden, axes_in, bias=True, bias_axis="mlp"),
+        "down": dense_def(hidden, d, axes_out, bias=True, bias_axis="embed"),
+    }
+
+
+def gelu_mlp(p, x):
+    return dense(p["down"], jax.nn.gelu(dense(p["up"], x)))
+
+
+# ----------------------------- rope -----------------------------------------
+
+
+def rope(x, positions, theta=10000.0):
+    """x [..., S, H, D]; positions [..., S]. Rotates pairs (d, d + D/2)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ----------------------------- losses ---------------------------------------
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean cross-entropy over valid positions. logits [..., V], labels [...]"""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

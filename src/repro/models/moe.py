@@ -1,0 +1,291 @@
+"""Mixture-of-Experts layer with two routers:
+
+- ``topk``: the literature-faithful baseline (softmax gate, top-k, capacity
+  dropping, load-balancing aux loss) — what qwen2-moe / deepseek-moe ship.
+- ``awpm``: the paper's technique applied to routing (DESIGN.md §4). Token ->
+  expert-slot assignment is a maximum-weight perfect matching on the
+  (token x slot) bipartite graph; we approximate it exactly the way the paper
+  approximates MWPM: a greedy balanced assignment (the maximal-matching
+  phase) followed by weight-augmenting 4-cycle rounds (the AWAC phase), where
+  a 4-cycle = a pair of tokens swapping experts with positive total affinity
+  gain, applied as a vertex-disjoint (mutual-best) set per round. This gives
+  a perfectly load-balanced, drop-free routing with near-max affinity and no
+  aux loss — the BASE-layers objective solved with the paper's machinery
+  instead of an auction (which §1 argues scales poorly).
+
+Dispatch is sort-based (argsort by expert, rank-within-expert slots), never
+materializing [T, E, C] one-hots.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, dense_def, mlp, mlp_def
+from repro.models.param import ParamDef, dense_init
+
+NEG = float("-inf")
+
+
+def _unpad_idx(nb, tb, tbp):
+    """Indices selecting the first tb rows of each tbp-sized block."""
+    return (jnp.arange(nb * tb, dtype=jnp.int32) // tb * tbp
+            + jnp.arange(nb * tb, dtype=jnp.int32) % tb)
+
+
+def moe_def(cfg, moe):
+    d = cfg.d_model
+    e, ff = moe.n_experts, moe.d_ff_expert
+    p = {
+        "router": {"w": ParamDef((d, e), dense_init(d), ("embed", None))},
+        "experts": {
+            "gate": ParamDef((e, d, ff), dense_init(d),
+                             ("experts", "embed", "expert_mlp")),
+            "up": ParamDef((e, d, ff), dense_init(d),
+                           ("experts", "embed", "expert_mlp")),
+            "down": ParamDef((e, ff, d), dense_init(ff),
+                             ("experts", "expert_mlp", "embed")),
+        },
+    }
+    if moe.n_shared:
+        p["shared"] = mlp_def(d, moe.d_ff_shared or moe.n_shared * ff)
+        if moe.shared_gate:
+            p["shared_gate"] = dense_def(d, 1, ("embed", None))
+    return p
+
+
+# --------------------------- routers ---------------------------------------
+
+
+def topk_route(logits, k, capacity):
+    """Faithful baseline. Returns (expert [T,k], slot [T,k], weight [T,k],
+    keep [T,k], aux_loss). Slot is rank-within-expert; tokens beyond
+    ``capacity`` are dropped."""
+    t, e = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)  # [T, k]
+    w = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    # rank within expert over flattened (token-major) choices
+    flat_e = topi.reshape(-1)  # [T*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+    ranks = jnp.cumsum(onehot, axis=0) - onehot
+    slot = jnp.take_along_axis(ranks, flat_e[:, None], axis=1)[:, 0].reshape(t, k)
+    keep = slot < capacity
+    # aux load-balance loss (Switch-style)
+    frac_tokens = jnp.mean(jax.nn.one_hot(topi[:, 0], e, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return topi, slot, w.astype(logits.dtype), keep, aux
+
+
+def balanced_assign(aff, capacity, max_iters=None):
+    """Greedy balanced assignment (the 'maximal matching' phase): proposal
+    rounds with per-expert top-capacity acceptance, then a deterministic
+    round-robin cleanup so every token is assigned and every expert holds
+    exactly ``capacity`` tokens. aff [T, E] (-inf = forbidden)."""
+    t, e = aff.shape
+    assert t == e * capacity, (t, e, capacity)
+    max_iters = max_iters or (e + 8)
+    tvec = jnp.arange(t, dtype=jnp.int32)
+
+    def body(carry):
+        assigned, cap, it = carry
+        open_e = cap > 0
+        aff_m = jnp.where((assigned[:, None] >= 0) | ~open_e[None, :], NEG, aff)
+        best_v = aff_m.max(axis=1)
+        best_e = jnp.argmax(aff_m, axis=1)
+        has = best_v > NEG
+        score_te = jnp.where(
+            has[None, :] & (best_e[None, :] == jnp.arange(e)[:, None]),
+            aff.T, NEG,
+        )  # [E, T]
+        vals, idxs = jax.lax.top_k(score_te, capacity)  # [E, C]
+        ok = (vals > NEG) & (jnp.arange(capacity)[None, :] < cap[:, None])
+        tok = jnp.where(ok, idxs, t).reshape(-1)
+        exp = jnp.where(ok, jnp.arange(e, dtype=jnp.int32)[:, None], 0).reshape(-1)
+        assigned = jnp.concatenate([assigned, jnp.array([-1], jnp.int32)])
+        assigned = assigned.at[tok].set(exp.astype(jnp.int32))[:t]
+        cap = cap - ok.sum(axis=1)
+        return assigned, cap, it + 1
+
+    def cond(carry):
+        assigned, _, it = carry
+        return (assigned < 0).any() & (it < max_iters)
+
+    assigned0 = jnp.full((t,), -1, jnp.int32)
+    cap0 = jnp.full((e,), capacity, jnp.int32)
+    assigned, cap, _ = jax.lax.while_loop(cond, body, (assigned0, cap0,
+                                                       jnp.array(0, jnp.int32)))
+    # cleanup: r-th remaining token -> expert owning the r-th free slot
+    rem = assigned < 0
+    rank = jnp.cumsum(rem.astype(jnp.int32)) - 1  # rank among remaining
+    free_cum = jnp.cumsum(cap)
+    slot_expert = jnp.searchsorted(free_cum, rank, side="right").astype(jnp.int32)
+    assigned = jnp.where(rem, slot_expert, assigned)
+    return assigned
+
+
+def swap_improve(aff, assign, rounds: int, min_gain=1e-6):
+    """AWAC on the router: mutual-best positive-gain token swaps, applied as a
+    vertex-disjoint set per round. Preserves perfect balance exactly."""
+    t = aff.shape[0]
+    tvec = jnp.arange(t, dtype=jnp.int32)
+
+    def body(_, assign):
+        cur = jnp.take_along_axis(aff, assign[:, None], axis=1)[:, 0]
+        a = jnp.take(aff, assign, axis=1)  # [T, T]: aff[i, e_j]
+        w = a + a.T - cur[:, None] - cur[None, :]
+        same = assign[:, None] == assign[None, :]
+        w = jnp.where(same, NEG, w)  # same-expert swap is a no-op
+        g = w.max(axis=0)
+        bp = jnp.argmax(w, axis=0).astype(jnp.int32)  # best partner per column
+        mutual = (jnp.take(bp, bp) == tvec) & (g > min_gain) & (tvec < bp)
+        swap_with = jnp.where(mutual, bp, tvec)
+        swap_with = jnp.concatenate([swap_with, jnp.array([t], jnp.int32)])
+        swap_with = swap_with.at[jnp.where(mutual, bp, t)].set(
+            jnp.where(mutual, tvec, t).astype(jnp.int32)
+        )[:t]
+        swap_with = jnp.where(swap_with == t, tvec, swap_with)
+        return jnp.take(assign, swap_with)
+
+    return jax.lax.fori_loop(0, rounds, body, assign)
+
+
+def awpm_route(logits, k, capacity_per_round, swap_rounds):
+    """k rounds of balanced assignment + 4-cycle improvement; round r
+    penalizes experts already used by the token (soft constraint, finite
+    penalty: a duplicate expert wastes a slot but stays well-defined — like
+    the paper's dropped cycles, rare cases are tolerated rather than paying
+    for an exact resolution). Returns (expert [T,k], slot [T,k], weight
+    [T,k], keep(all True), aux(0))."""
+    t, e = logits.shape
+    aff = logits.astype(jnp.float32)
+    used = jnp.zeros((t, e), bool)
+    experts = []
+    for _ in range(k):
+        a_r = jnp.where(used, aff - 1e6, aff)
+        assign = balanced_assign(a_r, capacity_per_round)
+        assign = swap_improve(a_r, assign, swap_rounds)
+        used = used | jax.nn.one_hot(assign, e, dtype=bool)
+        experts.append(assign)
+    topi = jnp.stack(experts, axis=1)  # [T, k]
+    # slots: round r occupies [r*C, (r+1)*C); rank within (expert, round)
+    slots = []
+    for r in range(k):
+        onehot = jax.nn.one_hot(experts[r], e, dtype=jnp.int32)
+        ranks = jnp.cumsum(onehot, axis=0) - onehot
+        srank = jnp.take_along_axis(ranks, experts[r][:, None], axis=1)[:, 0]
+        slots.append(srank + r * capacity_per_round)
+    slot = jnp.stack(slots, axis=1)
+    sel_aff = jnp.take_along_axis(aff, topi, axis=1)
+    w = jax.nn.softmax(sel_aff, axis=-1).astype(logits.dtype)
+    keep = jnp.ones((t, k), bool)
+    return topi, slot, w, keep, jnp.float32(0.0)
+
+
+# --------------------------- dispatch + layer --------------------------------
+
+
+def _expert_ffn(pe, xe):
+    """xe [E, C, d] -> [E, C, d] through per-expert SwiGLU."""
+    g = jnp.einsum("ecd,edf->ecf", xe, pe["gate"].astype(xe.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, pe["up"].astype(xe.dtype))
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u,
+                      pe["down"].astype(xe.dtype))
+
+
+def _expert_ffn_grouped(pe, xe):
+    """xe [G, E, C, d] -> [G, E, C, d] through per-expert SwiGLU."""
+    from repro.models.act_sharding import constrain
+
+    wg = constrain(pe["gate"].astype(xe.dtype), "w_expert")
+    wu = constrain(pe["up"].astype(xe.dtype), "w_expert")
+    wd = constrain(pe["down"].astype(xe.dtype), "w_expert")
+    g = jnp.einsum("gecd,edf->gecf", xe, wg)
+    u = jnp.einsum("gecd,edf->gecf", xe, wu)
+    return jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * u, wd)
+
+
+def moe_apply(p, x, cfg, moe):
+    """x [B, S, d] -> (y [B, S, d], aux_loss).
+
+    Dispatch is GROUPED: tokens are split into G groups (router_block for the
+    AWPM router; dispatch_groups for top-k; G=1 reproduces global dispatch),
+    each group routed and scattered into its own [E, C_g, d] buffer. Groups
+    shard over the data axes, so dispatch scatters stay shard-local and the
+    only cross-device traffic is the expert einsum itself (token <-> expert
+    all_to_all under expert parallelism) — §Perf iteration E1."""
+    from repro.models.act_sharding import constrain
+
+    b, s, d = x.shape
+    t = b * s
+    e, k = moe.n_experts, moe.top_k
+    xt = x.reshape(t, d)
+    logits = dense(p["router"], xt)
+
+    if moe.router == "awpm":
+        gb_sz = min(moe.router_block or t, t)
+    else:
+        gb_sz = t // max(moe.dispatch_groups, 1) if moe.dispatch_groups else t
+    n_g = -(-t // gb_sz)
+    tpad = n_g * gb_sz
+    logits_g = jnp.zeros((tpad, e), logits.dtype).at[:t].set(logits) \
+        .reshape(n_g, gb_sz, e)
+    x_g = jnp.zeros((tpad, d), xt.dtype).at[:t].set(xt).reshape(n_g, gb_sz, d)
+
+    if moe.router == "awpm":
+        # Block-local AWPM routing (DESIGN.md §4): the swap-gain matrix is
+        # [gb, gb] per group, never [T, T]; per-group balance => global.
+        tbp = -(-gb_sz // e) * e
+        cap_round = tbp // e
+        capacity = k * cap_round
+
+        def route_block(lg):
+            lgp = jnp.zeros((tbp, e), lg.dtype).at[:gb_sz].set(lg)
+            ti, sl, w, _, _ = awpm_route(lgp, k, cap_round,
+                                         moe.router_swap_rounds)
+            return ti[:gb_sz], sl[:gb_sz], w[:gb_sz]
+
+        topi, slot, w = jax.vmap(route_block)(logits_g)  # [G, gb, k]
+        keep = jnp.ones((n_g, gb_sz, k), bool)
+        aux = jnp.float32(0.0)
+    else:
+        capacity = int(moe.capacity_factor * k * gb_sz / e) + 1
+        topi, slot, w, keep, aux = jax.vmap(
+            lambda l: topk_route(l, k, capacity))(logits_g)
+        aux = aux.mean()
+    aux = aux * moe.aux_loss_coef
+
+    c = capacity
+    flat_idx = jnp.where(keep, topi * c + slot, e * c).reshape(n_g, gb_sz * k)
+    src = jnp.repeat(x_g, k, axis=1)  # [G, gb*k, d]
+
+    def disp(fi, xg):
+        return jnp.zeros((e * c + 1, d), xt.dtype).at[fi].set(xg)[:-1]
+
+    buf = jax.vmap(disp)(flat_idx, src).reshape(n_g, e, c, d)
+    buf = constrain(buf, "moe_buf4")
+    ye = constrain(_expert_ffn_grouped(p["experts"], buf), "moe_buf4")
+    ye = ye.reshape(n_g, e * c, d)
+    gathered = jax.vmap(lambda y, fi: jnp.take(y, jnp.clip(fi, 0, e * c - 1),
+                                               axis=0))(ye, flat_idx)
+    gathered = jnp.where((flat_idx < e * c)[..., None], gathered, 0.0)
+    yt = (gathered.reshape(n_g, gb_sz, k, d)
+          * w[..., None].astype(xt.dtype)).sum(axis=2).reshape(tpad, d)[:t]
+
+    if "shared" in p:
+        sh = mlp(p["shared"], xt)
+        if "shared_gate" in p:
+            sh = sh * jax.nn.sigmoid(dense(p["shared_gate"], xt).astype(jnp.float32)
+                                     ).astype(xt.dtype)
+        yt = yt + sh
+    return yt.reshape(b, s, d), aux
+
+
+def router_stats(logits, topi, n_experts):
+    """Diagnostics: per-expert load fractions + mean selected affinity."""
+    load = jnp.bincount(topi.reshape(-1), length=n_experts)
+    sel = jnp.take_along_axis(logits, topi, axis=1)
+    return {"load": load, "mean_affinity": sel.mean(),
+            "load_cv": jnp.std(load.astype(jnp.float32))
+                       / jnp.maximum(load.mean(), 1e-9)}

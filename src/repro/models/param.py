@@ -1,0 +1,113 @@
+"""Parameter definition + logical-axis sharding system.
+
+Modules declare parameter trees of ``ParamDef`` (shape, init, logical axis
+names). ``init_params`` materializes them; ``partition_specs`` maps logical
+axes to mesh axes through a rules dict (MaxText-style), so the same model
+definition serves 1-device smoke tests and the 512-chip dry-run.
+
+Logical axis vocabulary (see launch/mesh.py for the production rules):
+  "batch"     data-parallel dimension         -> ("pod", "data")
+  "embed"     model/residual width            -> "model" (TP) or None
+  "mlp"       FFN hidden                      -> "model"
+  "heads"     attention heads                 -> "model"
+  "kv_heads"  KV heads                        -> "model" when divisible
+  "vocab"     vocabulary / item tables        -> "model"
+  "experts"   MoE expert dimension            -> "pod" (EP) when divisible
+  "fsdp"      parameter sharding dimension    -> "data" (FSDP)
+  "nodes"/"edges"  graph entities             -> ("pod", "data")
+  None        replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    init: Callable  # (key, shape, dtype) -> array
+    axes: tuple[str | None, ...]  # logical axis names, len == len(shape)
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.axes) == len(self.shape), (self.shape, self.axes)
+
+
+def dense_init(fan_in: float | None = None, scale: float = 1.0):
+    def f(key, shape, dtype):
+        fi = fan_in if fan_in is not None else shape[0]
+        return jax.random.normal(key, shape, dtype) * (scale / np.sqrt(max(fi, 1)))
+
+    return f
+
+
+def zeros_init():
+    return lambda key, shape, dtype: jnp.zeros(shape, dtype)
+
+
+def ones_init():
+    return lambda key, shape, dtype: jnp.ones(shape, dtype)
+
+
+def embed_init(scale: float = 1.0):
+    return lambda key, shape, dtype: jax.random.normal(key, shape, dtype) * scale
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key):
+    """Materialize a tree of ParamDef into arrays (unique key per leaf)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [d.init(k, d.shape, d.dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(defs):
+    """ShapeDtypeStruct tree (for AOT lowering — no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def
+    )
+
+
+def partition_specs(defs, rules: dict[str | None, Any]):
+    """Map logical axes -> PartitionSpec through `rules`. Unknown names are an
+    error (catches typos); None maps to replicated."""
+
+    def spec(d: ParamDef):
+        entries = []
+        for name in d.axes:
+            if name is None:
+                entries.append(None)
+            else:
+                if name not in rules:
+                    raise KeyError(f"no sharding rule for logical axis {name!r}")
+                entries.append(rules[name])
+        return P(*entries)
+
+    return jax.tree.map(spec, defs, is_leaf=is_def)
+
+
+def sharded_init(defs, key, mesh, rules):
+    """init_params + device placement according to the rules (used by the
+    real trainer; the dry-run uses abstract_params instead)."""
+    specs = partition_specs(defs, rules)
+    params = init_params(defs, key)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, jax.sharding.NamedSharding(mesh, s)),
+        params,
+        specs,
+    )
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return int(sum(np.prod(d.shape) for d in leaves))

@@ -1,0 +1,99 @@
+"""BERT4Rec (arXiv:1904.06690): bidirectional transformer over item
+interaction sequences, trained with masked-item prediction (Cloze). Scoring
+head is the tied item-embedding matmul.
+
+Shapes (the assigned cells): train_batch 65536 masked-LM; serve_p99/bulk
+score the next item for each sequence; retrieval_cand scores 1 user against
+1M candidate items (tied-embedding dot products, sharded over candidates).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    dense, dense_def, gelu_mlp, gelu_mlp_def, layernorm, layernorm_def,
+    softmax_xent,
+)
+from repro.models.param import ParamDef, embed_init
+from repro.models.recsys.embedding import table_def
+
+
+def bert4rec_def(cfg):
+    d = cfg.embed_dim
+    blocks = []
+    for _ in range(cfg.n_blocks):
+        blocks.append({
+            "ln1": layernorm_def(d),
+            "q": dense_def(d, d, ("embed", "heads"), bias=True, bias_axis="heads"),
+            "k": dense_def(d, d, ("embed", "heads"), bias=True, bias_axis="heads"),
+            "v": dense_def(d, d, ("embed", "heads"), bias=True, bias_axis="heads"),
+            "o": dense_def(d, d, ("heads", "embed"), bias=True, bias_axis="embed"),
+            "ln2": layernorm_def(d),
+            "ffn": gelu_mlp_def(d, cfg.d_ff_mult * d),
+        })
+    return {
+        "items": table_def(cfg.padded_items, d),  # +mask +pad +shard padding
+        "pos": ParamDef((cfg.seq_len, d), embed_init(0.02), (None, "embed")),
+        "blocks": blocks,
+        "final_ln": layernorm_def(d),
+        "out_bias": ParamDef((cfg.padded_items,), lambda k, s, dt: jnp.zeros(s, dt),
+                             ("vocab",)),
+    }
+
+
+def _bidir_attention(bp, x, cfg):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    q = dense(bp["q"], x).reshape(b, s, h, hd)
+    k = dense(bp["k"], x).reshape(b, s, h, hd)
+    v = dense(bp["v"], x).reshape(b, s, h, hd)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (hd ** 0.5)
+    p = jax.nn.softmax(sc.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(b, s, d)
+    return dense(bp["o"], o)
+
+
+def encode(params, item_seq, cfg):
+    """item_seq [B, S] int32 -> hidden [B, S, d]."""
+    from repro.models.act_sharding import constrain
+
+    x = constrain(jnp.take(params["items"], item_seq, axis=0), "rec_act")
+    x = x + params["pos"][None, : x.shape[1]]
+    for bp in params["blocks"]:
+        x = constrain(x + _bidir_attention(bp, layernorm(bp["ln1"], x), cfg),
+                      "rec_act")
+        x = constrain(x + gelu_mlp(bp["ffn"], layernorm(bp["ln2"], x)),
+                      "rec_act")
+    return layernorm(params["final_ln"], x)
+
+
+def logits_all_items(params, hidden):
+    """Tied-embedding scores over the full item vocabulary."""
+    return (hidden.astype(jnp.float32) @ params["items"].T.astype(jnp.float32)
+            + params["out_bias"])
+
+
+def loss_fn(params, batch, cfg):
+    """Masked-item (Cloze) objective. batch: item_seq [B,S], labels [B,S],
+    mask [B,S] (1 at masked positions)."""
+    h = encode(params, batch["item_seq"], cfg)
+    logits = logits_all_items(params, h)
+    loss = softmax_xent(logits, batch["labels"], batch["mask"])
+    return loss, {"xent": loss}
+
+
+def serve_scores(params, item_seq, cfg):
+    """Next-item scores from the last position. [B, n_items+2]."""
+    h = encode(params, item_seq, cfg)
+    return logits_all_items(params, h[:, -1:])[:, 0]
+
+
+def retrieval_scores(params, item_seq, candidates, cfg):
+    """Score ONE user sequence against a candidate set [Nc] (batched dot,
+    never a loop): returns [B, Nc]."""
+    h = encode(params, item_seq, cfg)[:, -1]  # [B, d]
+    cand_emb = jnp.take(params["items"], candidates, axis=0)  # [Nc, d]
+    return (h.astype(jnp.float32) @ cand_emb.T.astype(jnp.float32)
+            + params["out_bias"][candidates])

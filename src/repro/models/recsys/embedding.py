@@ -1,0 +1,31 @@
+"""Sharded embedding lookup + EmbeddingBag (JAX has neither natively; built
+from take + segment_sum per the brief; the Pallas kernel in
+repro.kernels.embedding_bag is the TPU hot-path version)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embedding_bag.ops import embedding_bag_padded
+from repro.models.param import ParamDef, embed_init
+
+
+def table_def(n_rows: int, dim: int, name_axis: str = "vocab"):
+    return ParamDef((n_rows, dim), embed_init(0.02), (name_axis, "embed"))
+
+
+def lookup(table, idx):
+    """Plain row gather; with a row-sharded table XLA lowers this to a
+    one-hot-free dynamic-gather + collective (all-to-all style)."""
+    return jnp.take(table, idx, axis=0)
+
+
+def embedding_bag(table, idx, weights, use_kernel: bool = False,
+                  interpret: bool = True):
+    """out[b] = sum_l weights[b, l] * table[idx[b, l]]; idx -1 = padding."""
+    if use_kernel:
+        return embedding_bag_padded(idx, weights, table, interpret=interpret)
+    safe = jnp.clip(idx, 0, table.shape[0] - 1)
+    rows = jnp.take(table, safe, axis=0)
+    w = jnp.where(idx >= 0, weights, 0.0).astype(rows.dtype)
+    return jnp.sum(rows * w[..., None], axis=-2)

@@ -1,0 +1,280 @@
+"""Decoder-only LM (Qwen2/DeepSeek families): GQA + RoPE + SwiGLU (+ MoE),
+scan-over-layers with rematerialization, train/prefill/decode entry points.
+
+Parameters are stacked along a leading layer dimension and consumed by
+``lax.scan`` — essential to keep HLO size flat for the 80-layer dry-runs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_lib
+from repro.models.act_sharding import constrain
+from repro.models.attention import attention_def, decode_attention, self_attention
+from repro.models.layers import dense, dense_def, mlp, mlp_def, rmsnorm, rmsnorm_def, softmax_xent
+from repro.models.param import ParamDef, dense_init, embed_init, is_def
+
+
+def stack_defs(defs, n: int):
+    """Lift a block's ParamDefs to stacked per-layer defs (leading dim n)."""
+
+    def lift(d: ParamDef) -> ParamDef:
+        def init(key, shape, dtype):
+            keys = jax.random.split(key, n)
+            return jax.vmap(lambda k: d.init(k, d.shape, dtype))(keys)
+
+        return ParamDef((n, *d.shape), init, (None, *d.axes), d.dtype)
+
+    return jax.tree.map(lift, defs, is_leaf=is_def)
+
+
+def block_def(cfg, moe_layer: bool, d_ff: int | None = None):
+    if moe_layer:
+        ffn = moe_lib.moe_def(cfg, cfg.moe)
+    else:
+        ffn = mlp_def(cfg.d_model, d_ff or cfg.d_ff)
+    return {
+        "ln1": rmsnorm_def(cfg.d_model),
+        "attn": attention_def(cfg),
+        "ln2": rmsnorm_def(cfg.d_model),
+        "ffn": ffn,
+    }
+
+
+def lm_def(cfg):
+    d, v = cfg.d_model, cfg.vocab
+    defs = {"embed": ParamDef((v, d), embed_init(0.02), ("vocab", "embed"))}
+    md = cfg.moe
+    if md is None:
+        defs["blocks"] = stack_defs(block_def(cfg, False), cfg.n_layers)
+    else:
+        if md.first_dense:
+            defs["dense_blocks"] = stack_defs(
+                block_def(cfg, False, d_ff=md.d_ff_dense or cfg.d_ff),
+                md.first_dense,
+            )
+        defs["moe_blocks"] = stack_defs(
+            block_def(cfg, True), cfg.n_layers - md.first_dense
+        )
+    defs["final_norm"] = rmsnorm_def(d)
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = dense_def(d, v, ("embed", "vocab"))
+    return defs
+
+
+def _block_apply(bp, x, positions, cfg, moe_layer: bool):
+    h, kv = self_attention(bp["attn"], rmsnorm(bp["ln1"], x), positions, cfg)
+    x = constrain(x + h, "lm_act")
+    hin = rmsnorm(bp["ln2"], x)
+    if moe_layer:
+        f, aux = moe_lib.moe_apply(bp["ffn"], hin, cfg, cfg.moe)
+    else:
+        f, aux = mlp(bp["ffn"], hin), jnp.float32(0.0)
+    return constrain(x + f, "lm_act"), aux, kv
+
+
+def _scan_group(blocks, x, positions, cfg, moe_layer, collect_cache):
+    def body(carry, bp):
+        x, aux = carry
+        x2, a, kv = _block_apply(bp, x, positions, cfg, moe_layer)
+        ys = kv if collect_cache else None
+        return (x2, aux + a), ys
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if not cfg.scan:  # unrolled (cost-probe path: HLO counts every layer)
+        n = jax.tree.leaves(blocks)[0].shape[0]
+        aux = jnp.float32(0.0)
+        kvs = []
+        for i in range(n):
+            bp = jax.tree.map(lambda a_: a_[i], blocks)
+            (x, aux), kv = body((x, aux), bp)
+            kvs.append(kv)
+        if collect_cache:
+            kvs = jax.tree.map(lambda *xs: jnp.stack(xs), *kvs)
+        else:
+            kvs = None
+        return x, aux, kvs
+    (x, aux), kvs = jax.lax.scan(body, (x, jnp.float32(0.0)), blocks)
+    return x, aux, kvs
+
+
+def forward(params, tokens, cfg, collect_cache: bool = False):
+    """tokens [B, S] -> (logits [B, S, V] f32, aux_loss, cache dict)."""
+    dtype = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    x = constrain(jnp.take(params["embed"], tokens, axis=0).astype(dtype),
+                  "lm_act")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    aux = jnp.float32(0.0)
+    cache = {}
+    if cfg.moe is None:
+        x, a, kv = _scan_group(params["blocks"], x, positions, cfg, False,
+                               collect_cache)
+        aux += a
+        cache["blocks"] = kv
+    else:
+        if cfg.moe.first_dense:
+            x, a, kv = _scan_group(params["dense_blocks"], x, positions, cfg,
+                                   False, collect_cache)
+            aux += a
+            cache["dense_blocks"] = kv
+        x, a, kv = _scan_group(params["moe_blocks"], x, positions, cfg, True,
+                               collect_cache)
+        aux += a
+        cache["moe_blocks"] = kv
+    x = rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    else:
+        logits = dense(params["lm_head"], x).astype(jnp.float32)
+    logits = constrain(logits, "lm_logits")
+    return logits, aux, (cache if collect_cache else None)
+
+
+def loss_fn(params, batch, cfg):
+    if cfg.loss_chunks > 1:
+        return _chunked_loss_fn(params, batch, cfg)
+    logits, aux, _ = forward(params, batch["tokens"], cfg)
+    loss = softmax_xent(logits, batch["labels"], batch.get("mask"))
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+def _chunked_loss_fn(params, batch, cfg):
+    """Sequence-chunked cross-entropy (§Perf iteration L2): never
+    materializes the full [B, S, V] f32 logits — each S-chunk's logits are
+    computed, reduced to (nll_sum, count), and rematerialized in backward."""
+    hidden, aux = _hidden(params, batch["tokens"], cfg)
+    b, s, d = hidden.shape
+    nc = cfg.loss_chunks
+    assert s % nc == 0, (s, nc)
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    hc = hidden.reshape(b, nc, s // nc, d).swapaxes(0, 1)
+    lc = batch["labels"].reshape(b, nc, s // nc).swapaxes(0, 1)
+    mc = mask.reshape(b, nc, s // nc).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk(h, lab, msk):
+        if cfg.tie_embeddings:
+            logits = h.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+        else:
+            logits = dense(params["lm_head"], h).astype(jnp.float32)
+        logits = constrain(logits, "lm_logits")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        return ((lse - ll) * msk).sum(), msk.sum()
+
+    def body(carry, xs):
+        tot, cnt = carry
+        t, c = chunk(*xs)
+        return (tot + t, cnt + c), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (hc, lc, mc))
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+def _hidden(params, tokens, cfg):
+    """Forward up to the final norm (no logits)."""
+    dtype = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    x = constrain(jnp.take(params["embed"], tokens, axis=0).astype(dtype),
+                  "lm_act")
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    aux = jnp.float32(0.0)
+    if cfg.moe is None:
+        x, a, _ = _scan_group(params["blocks"], x, positions, cfg, False, False)
+        aux += a
+    else:
+        if cfg.moe.first_dense:
+            x, a, _ = _scan_group(params["dense_blocks"], x, positions, cfg,
+                                  False, False)
+            aux += a
+        x, a, _ = _scan_group(params["moe_blocks"], x, positions, cfg, True,
+                              False)
+        aux += a
+    return rmsnorm(params["final_norm"], x), aux
+
+
+def prefill(params, tokens, cfg):
+    """Returns (last-position logits [B, V], cache). Cache entries are
+    (k, v) stacked [L, B, S, Hkv, D] per block group."""
+    logits, _, cache = forward(params, tokens, cfg, collect_cache=True)
+    return logits[:, -1], cache
+
+
+def decode_step(params, cache, token, pos, cfg):
+    """One decode step. cache: dict group -> (k [L,B,Smax,Hkv,D], v ...);
+    token [B, 1] int32; pos scalar int32 (current length). Returns
+    (logits [B, V] f32, new_cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = jnp.take(params["embed"], token, axis=0).astype(dtype)
+
+    def group(blocks, kc, vc, x, moe_layer):
+        def body(x, xs):
+            bp, k_l, v_l = xs
+            h, k_new, v_new = decode_attention(
+                bp["attn"], rmsnorm(bp["ln1"], x), k_l, v_l, pos, cfg
+            )
+            x = x + h
+            hin = rmsnorm(bp["ln2"], x)
+            if moe_layer:
+                f, _ = moe_lib.moe_apply(bp["ffn"], hin, cfg, cfg.moe)
+            else:
+                f = mlp(bp["ffn"], hin)
+            return x + f, (k_new, v_new)
+
+        if not cfg.scan:  # unrolled cost-probe path
+            ks, vs = [], []
+            n = jax.tree.leaves(blocks)[0].shape[0]
+            for i in range(n):
+                bp = jax.tree.map(lambda a_: a_[i], blocks)
+                x, (k2, v2) = body(x, (bp, kc[i], vc[i]))
+                ks.append(k2)
+                vs.append(v2)
+            return x, (jnp.stack(ks), jnp.stack(vs))
+        x, (kc2, vc2) = jax.lax.scan(body, x, (blocks, kc, vc))
+        return x, (kc2, vc2)
+
+    new_cache = {}
+    if cfg.moe is None:
+        x, new_cache["blocks"] = group(params["blocks"], *cache["blocks"], x, False)
+    else:
+        if cfg.moe.first_dense:
+            x, new_cache["dense_blocks"] = group(
+                params["dense_blocks"], *cache["dense_blocks"], x, False
+            )
+        x, new_cache["moe_blocks"] = group(
+            params["moe_blocks"], *cache["moe_blocks"], x, True
+        )
+    x = rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = x.astype(jnp.float32) @ params["embed"].T.astype(jnp.float32)
+    else:
+        logits = dense(params["lm_head"], x).astype(jnp.float32)
+    logits = constrain(logits, "lm_logits")
+    return logits[:, 0], new_cache
+
+
+def cache_shapes(cfg, batch: int, seq: int, groups=True):
+    """ShapeDtypeStructs for a decode cache (used by input_specs + serving)."""
+    hd = cfg.hd
+    dt = jnp.dtype(cfg.dtype)
+
+    def kv(n_layers):
+        shp = (n_layers, batch, seq, cfg.n_kv_heads, hd)
+        return (jax.ShapeDtypeStruct(shp, dt), jax.ShapeDtypeStruct(shp, dt))
+
+    if cfg.moe is None:
+        return {"blocks": kv(cfg.n_layers)}
+    out = {}
+    if cfg.moe.first_dense:
+        out["dense_blocks"] = kv(cfg.moe.first_dense)
+    out["moe_blocks"] = kv(cfg.n_layers - cfg.moe.first_dense)
+    return out

@@ -1,0 +1,42 @@
+"""Straggler detection: EWMA step-time monitor with z-score flagging.
+
+On a real fleet each host reports its step wall-time; ranks whose EWMA
+exceeds ``threshold`` x the fleet median are flagged for (a) input resharding
+away from them, (b) eviction + elastic re-mesh (runtime.elastic). Here the
+monitor also serves the single-host training loop as a slow-step alarm."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    alpha: float = 0.2
+    threshold: float = 2.0
+    warmup: int = 5
+
+    def __post_init__(self):
+        self.ewma: dict[int, float] = {}
+        self.n: dict[int, int] = {}
+        self.flagged: set[int] = set()
+        self.history: list[tuple[int, float]] = []
+
+    def record(self, step: int, dt: float, rank: int = 0):
+        prev = self.ewma.get(rank)
+        self.ewma[rank] = dt if prev is None else \
+            self.alpha * dt + (1 - self.alpha) * prev
+        self.n[rank] = self.n.get(rank, 0) + 1
+        self.history.append((rank, dt))
+        self._evaluate()
+
+    def _evaluate(self):
+        ready = {r: t for r, t in self.ewma.items() if self.n[r] >= self.warmup}
+        if len(ready) < 2:
+            return
+        med = float(np.median(list(ready.values())))
+        self.flagged = {r for r, t in ready.items() if t > self.threshold * med}
+
+    def slow_ranks(self):
+        return sorted(self.flagged)

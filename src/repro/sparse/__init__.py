@@ -1,0 +1,31 @@
+"""Sparse substrate: segment ops, padded CSR/COO builders, 2D partitioning.
+
+JAX has no CSR/CSC (BCOO only), no EmbeddingBag, and no native scatter-based
+message passing. Per the project brief these are implemented here from
+``jnp.take`` + ``jax.ops.segment_sum``-family primitives and are first-class
+parts of the system (used by repro.core, repro.models.gnn, repro.models.recsys).
+"""
+from repro.sparse.ops import (
+    segment_argmax,
+    segment_max_with_payload,
+    segment_softmax,
+    coo_spmm,
+    coo_sddmm,
+    lex_searchsorted,
+)
+from repro.sparse.csr import PaddedCSR, coo_to_padded_csr, sort_coo
+from repro.sparse.partition import Partition2D, partition_coo_2d
+
+__all__ = [
+    "segment_argmax",
+    "segment_max_with_payload",
+    "segment_softmax",
+    "coo_spmm",
+    "coo_sddmm",
+    "lex_searchsorted",
+    "PaddedCSR",
+    "coo_to_padded_csr",
+    "sort_coo",
+    "Partition2D",
+    "partition_coo_2d",
+]

@@ -1,0 +1,126 @@
+"""Segment-op primitives used across the framework.
+
+All ops are shape-static and jit/vmap/shard_map friendly. Padding convention:
+invalid entries carry ``segment_id == num_segments`` (one past the end) and are
+dropped by passing ``num_segments + 1`` internally and slicing the tail off, or
+by masking values to the reduction identity.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG = -jnp.inf
+
+
+def segment_max_with_payload(values, payload, segment_ids, num_segments):
+    """Per-segment max of ``values`` and the payload of (one of) the argmax rows.
+
+    Ties are broken toward the smallest payload value, which makes the result
+    deterministic (the paper's Step C/D pick "one with maximum gain"; we fix the
+    tie-break so sequential and distributed implementations agree bit-for-bit).
+
+    Returns (seg_max [num_segments], seg_payload [num_segments int32]).
+    Segments with no entries get (-inf, -1).
+    """
+    seg_max = jax.ops.segment_max(
+        values, segment_ids, num_segments=num_segments, indices_are_sorted=False
+    )
+    # Rows achieving their segment's max; among them take min payload.
+    hit = values == seg_max[jnp.clip(segment_ids, 0, num_segments - 1)]
+    big = jnp.iinfo(jnp.int32).max
+    cand = jnp.where(hit, payload, big)
+    seg_payload = jax.ops.segment_min(cand, segment_ids, num_segments=num_segments)
+    seg_payload = jnp.where(seg_max == NEG, -1, seg_payload)
+    seg_payload = jnp.where(seg_payload == big, -1, seg_payload)
+    return seg_max, seg_payload
+
+
+def segment_argmax_tie(values, tie, segment_ids, num_segments):
+    """Per-segment argmax with an explicit tie-break key (smallest ``tie``
+    wins; a second tie falls back to smallest index). Returns
+    (seg_max, seg_idx) where seg_idx indexes into ``values`` (-1 if empty).
+
+    Used by the distributed AWAC Step C so that the distributed winner
+    selection matches the single-device rule (max gain, tie -> smallest row)
+    even though edges arrive in a different order."""
+    seg_max = jax.ops.segment_max(values, segment_ids, num_segments=num_segments)
+    hit = values == seg_max[jnp.clip(segment_ids, 0, num_segments - 1)]
+    big = jnp.iinfo(jnp.int32).max
+    tie_m = jnp.where(hit, tie, big)
+    seg_tie = jax.ops.segment_min(tie_m, segment_ids, num_segments=num_segments)
+    hit2 = hit & (tie == seg_tie[jnp.clip(segment_ids, 0, num_segments - 1)])
+    idx = jnp.arange(values.shape[0], dtype=jnp.int32)
+    idx_m = jnp.where(hit2, idx, big)
+    seg_idx = jax.ops.segment_min(idx_m, segment_ids, num_segments=num_segments)
+    seg_idx = jnp.where((seg_max == NEG) | (seg_idx == big), -1, seg_idx)
+    return seg_max, seg_idx
+
+
+def segment_argmax(values, segment_ids, num_segments):
+    """Per-segment argmax (row index into ``values``); -1 for empty segments."""
+    idx = jnp.arange(values.shape[0], dtype=jnp.int32)
+    _, arg = segment_max_with_payload(values, idx, segment_ids, num_segments)
+    return arg
+
+
+def segment_softmax(logits, segment_ids, num_segments):
+    """Numerically-stable softmax within each segment (GAT-style edge softmax)."""
+    seg_max = jax.ops.segment_max(logits, segment_ids, num_segments=num_segments)
+    seg_max = jnp.where(jnp.isneginf(seg_max), 0.0, seg_max)
+    shifted = logits - seg_max[segment_ids]
+    ex = jnp.exp(shifted)
+    denom = jax.ops.segment_sum(ex, segment_ids, num_segments=num_segments)
+    return ex / jnp.maximum(denom[segment_ids], 1e-30)
+
+
+def coo_spmm(row, col, val, x, n_rows):
+    """y = A @ x for COO A (row, col, val) and dense x [n_cols, d].
+
+    Padding entries must have ``row == n_rows`` (they are accumulated into a
+    scratch segment and dropped). This is the GNN message-passing primitive.
+    """
+    msgs = jnp.take(x, col, axis=0) * val[:, None]
+    y = jax.ops.segment_sum(msgs, row, num_segments=n_rows + 1)
+    return y[:n_rows]
+
+
+def coo_sddmm(row, col, a, b):
+    """Sampled dense-dense matmul: out[e] = <a[row[e]], b[col[e]]>."""
+    return jnp.einsum(
+        "ed,ed->e", jnp.take(a, row, axis=0), jnp.take(b, col, axis=0)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps",))
+def lex_searchsorted(keys_r, keys_c, q_r, q_c, n_steps: int = 32):
+    """Vectorized fixed-depth binary search for (q_r, q_c) in the lexicographically
+    sorted key pairs (keys_r, keys_c). Returns (pos, found) where ``pos`` is the
+    insertion index and ``found`` marks exact hits.
+
+    Avoids int64 key encoding (row*ncols+col overflows int32 for big blocks);
+    n_steps=32 covers any int32-sized array.
+    """
+    m = keys_r.shape[0]
+    lo = jnp.zeros_like(q_r)
+    hi = jnp.full_like(q_r, m)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = (lo + hi) // 2
+        mid_c = jnp.clip(mid, 0, m - 1)
+        kr = keys_r[mid_c]
+        kc = keys_c[mid_c]
+        # key < query (lexicographic)
+        lt = (kr < q_r) | ((kr == q_r) & (kc < q_c))
+        lo = jnp.where(lt, mid + 1, lo)
+        hi = jnp.where(lt, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, n_steps, body, (lo, hi))
+    pos = lo
+    pos_c = jnp.clip(pos, 0, m - 1)
+    found = (pos < m) & (keys_r[pos_c] == q_r) & (keys_c[pos_c] == q_c)
+    return pos, found

@@ -1,0 +1,79 @@
+"""2D block partitioning of a sparse matrix over a Pr x Pc process grid.
+
+This mirrors the paper's CombBLAS-style regular 2D distribution: process (a, b)
+owns the dense index block rows [a*br, (a+1)*br) x cols [b*bc, (b+1)*bc).
+Per-block edge lists are padded to a common capacity so the stacked arrays
+[Pr, Pc, cap] shard cleanly under shard_map with PartitionSpec("data","model").
+
+Entries store GLOBAL indices (int32). Padding entries have row = col = n (the
+global sentinel) and val = 0; every consumer masks on ``row < n``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Partition2D:
+    n: int  # global rows == cols (square, per the paper)
+    pr: int
+    pc: int
+    br: int  # block rows  = ceil(n / pr)
+    bc: int  # block cols  = ceil(n / pc)
+    cap: int  # per-block edge capacity
+    nnz: np.ndarray  # [pr, pc] int32 actual nnz per block
+    row: np.ndarray  # [pr, pc, cap] int32 global row ids, lex-sorted per block
+    col: np.ndarray  # [pr, pc, cap] int32 global col ids
+    val: np.ndarray  # [pr, pc, cap] float32
+
+    def block_of(self, i, j):
+        return i // self.br, j // self.bc
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+def partition_coo_2d(
+    row, col, val, n: int, pr: int, pc: int, cap: int | None = None, pad_align: int = 8
+) -> Partition2D:
+    row = np.asarray(row, dtype=np.int32)
+    col = np.asarray(col, dtype=np.int32)
+    val = np.asarray(val, dtype=np.float32)
+    br = -(-n // pr)
+    bc = -(-n // pc)
+    a = row // br
+    b = col // bc
+    blk = a * pc + b
+    order = np.lexsort((col, row, blk))
+    row, col, val, blk = row[order], col[order], val[order], blk[order]
+    counts = np.bincount(blk, minlength=pr * pc)
+    max_nnz = int(counts.max()) if counts.size else 0
+    if cap is None:
+        cap = max(_round_up(max_nnz, pad_align), pad_align)
+    if cap < max_nnz:
+        raise ValueError(f"cap {cap} < max block nnz {max_nnz}")
+    R = np.full((pr * pc, cap), n, dtype=np.int32)
+    C = np.full((pr * pc, cap), n, dtype=np.int32)
+    V = np.zeros((pr * pc, cap), dtype=np.float32)
+    starts = np.zeros(pr * pc + 1, dtype=np.int64)
+    np.cumsum(counts, out=starts[1:])
+    for p in range(pr * pc):
+        s, e = starts[p], starts[p + 1]
+        R[p, : e - s] = row[s:e]
+        C[p, : e - s] = col[s:e]
+        V[p, : e - s] = val[s:e]
+    return Partition2D(
+        n=n,
+        pr=pr,
+        pc=pc,
+        br=br,
+        bc=bc,
+        cap=cap,
+        nnz=counts.reshape(pr, pc).astype(np.int32),
+        row=R.reshape(pr, pc, cap),
+        col=C.reshape(pr, pc, cap),
+        val=V.reshape(pr, pc, cap),
+    )

@@ -1,0 +1,84 @@
+"""Gradient compression for bandwidth-bound data parallelism.
+
+Two composable schemes (both with error feedback so compression noise is
+unbiased over time — Karimireddy et al., arXiv:1901.09847):
+
+- int8 quantization: per-tensor symmetric scale, all-reduce runs on 1/4 the
+  bytes (decode after the sum).
+- top-k sparsification: keep the k largest-|g| entries per tensor, exchange
+  (values, indices); the residual is fed back into the next step.
+
+``compressed_psum`` is the shard_map building block; ``CompressedState``
+carries the error-feedback residuals between steps.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedState(NamedTuple):
+    residual: object  # pytree like grads
+
+
+def init_state(grads_like) -> CompressedState:
+    return CompressedState(jax.tree.map(jnp.zeros_like, grads_like))
+
+
+def quantize_int8(x):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_int8_psum(grads, state: CompressedState, axis_name):
+    """Error-feedback int8 all-reduce (use inside shard_map over data axis)."""
+
+    def one(g, r):
+        gc = g + r
+        q, scale = quantize_int8(gc)
+        deq = dequantize_int8(q, scale)
+        new_r = gc - deq
+        # int32 accumulate of int8 payloads: 4x fewer exchanged bytes when
+        # the backend sends int8 and upcasts at the reducer; we emulate the
+        # numerics with an int32 psum of the int8 values.
+        summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        scale_sum = jax.lax.pmax(scale, axis_name)  # conservative shared scale
+        return summed.astype(jnp.float32) * scale_sum \
+            / jax.lax.psum(1, axis_name), new_r
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(state.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return tdef.unflatten([o[0] for o in out]), CompressedState(
+        tdef.unflatten([o[1] for o in out]))
+
+
+def topk_sparsify(x, k_frac: float = 0.01):
+    """Keep the top-k |values|; returns (dense reconstruction, residual)."""
+    flat = x.reshape(-1)
+    k = max(1, int(k_frac * flat.shape[0]))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = jnp.zeros_like(flat).at[idx].set(flat[idx])
+    return kept.reshape(x.shape), (x - kept.reshape(x.shape))
+
+
+def compress_topk(grads, state: CompressedState, k_frac: float = 0.01):
+    """Error-feedback top-k (exchange k values+indices instead of the dense
+    tensor; here returns the dense reconstruction for the optimizer)."""
+
+    def one(g, r):
+        kept, res = topk_sparsify(g + r, k_frac)
+        return kept, res
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(state.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return tdef.unflatten([o[0] for o in out]), CompressedState(
+        tdef.unflatten([o[1] for o in out]))

@@ -1,0 +1,80 @@
+"""Train-step construction + host-side training loop (with checkpointing,
+straggler monitoring, and elastic restart hooks)."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig,
+                    grad_accum: int = 1):
+    """loss_fn(params, batch) -> (loss, aux). Returns
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    grad_accum > 1 microbatches along the leading batch axis (batch dims must
+    divide) — the standard memory lever for the 110B-scale configs."""
+
+    def compute_grads(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, aux), grads = compute_grads(params, batch)
+        else:
+            def micro(i):
+                return jax.tree.map(
+                    lambda x: x.reshape(grad_accum, -1, *x.shape[1:])[i], batch
+                )
+
+            def body(carry, i):
+                gacc, lacc = carry
+                (l, _), g = compute_grads(params, micro(i))
+                return (jax.tree.map(jnp.add, gacc, g), lacc + l), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (grads, loss), _ = jax.lax.scan(
+                body, (zeros, jnp.float32(0.0)), jnp.arange(grad_accum)
+            )
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+        params, opt_state, om = adamw_update(opt_cfg, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+def train(params, loss_fn, data_fn, opt_cfg: AdamWConfig, n_steps: int,
+          log_every: int = 20, checkpoint_mgr=None, checkpoint_every: int = 0,
+          straggler_monitor=None, start_step: int = 0):
+    """Host loop. data_fn(step) -> batch (numpy). Returns (params, history)."""
+    opt_state = init_opt_state(params)
+    if checkpoint_mgr is not None and start_step == 0:
+        restored = checkpoint_mgr.restore_latest(
+            like={"params": params, "opt": opt_state})
+        if restored is not None:
+            params, opt_state, start_step = restored
+            start_step += 1
+
+    step_fn = jax.jit(make_train_step(loss_fn, opt_cfg))
+    history = []
+    for step in range(start_step, n_steps):
+        t0 = time.perf_counter()
+        batch = jax.tree.map(jnp.asarray, data_fn(step))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        if straggler_monitor is not None:
+            straggler_monitor.record(step, dt)
+        if step % log_every == 0 or step == n_steps - 1:
+            history.append({"step": step, "loss": loss, "dt": dt})
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"({dt*1e3:.0f} ms)", flush=True)
+        if checkpoint_mgr is not None and checkpoint_every \
+                and step and step % checkpoint_every == 0:
+            checkpoint_mgr.save(step, params, opt_state)
+    return params, opt_state, history

@@ -1,0 +1,94 @@
+"""AdamW + global-norm clipping + cosine schedule (self-contained, no optax
+dependency). Optimizer state mirrors the param tree (m, v) so it shards with
+the same PartitionSpecs as the parameters (FSDP-friendly)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: object  # pytree like params
+    v: object
+
+
+def init_opt_state(params) -> OptState:
+    z = jax.tree.map(jnp.zeros_like, params)
+    return OptState(jnp.zeros((), jnp.int32), z,
+                    jax.tree.map(jnp.zeros_like, params))
+
+
+def abstract_opt_state(abstract_params) -> OptState:
+    return OptState(
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                     abstract_params),
+        jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                     abstract_params),
+    )
+
+
+def opt_specs(param_specs):
+    """PartitionSpecs for OptState given the param spec tree."""
+    from jax.sharding import PartitionSpec as P
+
+    return OptState(P(), param_specs, param_specs)
+
+
+def schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    lr = schedule(cfg, step.astype(jnp.float32))
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m2 / b1c
+        vh = v2 / b2c
+        p2 = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p)
+        return p2.astype(p.dtype), m2, v2
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"grad_norm": gn, "lr": lr}

@@ -1,0 +1,33 @@
+"""Helper to run test payloads in a fresh process with a fake multi-device
+XLA platform (device count must be set before jax initializes, so it cannot
+be done inside the pytest process, which already holds 1 CPU device)."""
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def run_with_devices(script: str, n_devices: int, timeout: int = 900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n_devices} "
+        + env.get("XLA_FLAGS", "").replace(
+            "--xla_force_host_platform_device_count", "--ignored"
+        )
+    )
+    env["PYTHONPATH"] = f"{REPO / 'src'}:{env.get('PYTHONPATH', '')}"
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}"
+        )
+    return proc.stdout

@@ -1,0 +1,192 @@
+"""Per-architecture smoke tests: instantiate the REDUCED config of the same
+family and run one forward/train step on CPU, asserting output shapes and no
+NaNs (the FULL configs are exercised only via the dry-run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.base import ShapeSpec
+from repro.data import graphs as G
+from repro.models import build_defs, build_loss
+from repro.models.param import count_params, init_params
+
+LM_ARCHS = ["qwen2-0.5b", "qwen1.5-110b", "qwen2-7b", "qwen2-moe-a2.7b",
+            "deepseek-moe-16b"]
+GNN_ARCHS = ["graphsage-reddit", "equiformer-v2", "dimenet", "graphcast"]
+
+
+def _assert_finite(x, name):
+    arr = np.asarray(jax.device_get(x), np.float32)
+    assert np.isfinite(arr).all(), f"{name}: non-finite values"
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    defs = build_defs(cfg)
+    params = init_params(defs, jax.random.PRNGKey(0))
+    assert count_params(defs) > 0
+    b, s = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens,
+             "mask": jnp.ones((b, s), jnp.float32)}
+    loss_fn = build_loss(cfg)
+    (loss, aux), grads = jax.value_and_grad(
+        lambda p: loss_fn(p, batch), has_aux=True)(params)
+    _assert_finite(loss, arch)
+    for leaf in jax.tree.leaves(grads):
+        _assert_finite(leaf, f"{arch} grads")
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_prefill_decode(arch):
+    from repro.models import transformer as T
+
+    cfg = get_config(arch, reduced=True)
+    params = init_params(build_defs(cfg), jax.random.PRNGKey(0))
+    b, s = 2, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    logits, cache = jax.jit(lambda p, t: T.prefill(p, t, cfg))(params, tokens)
+    assert logits.shape == (b, cfg.vocab)
+    _assert_finite(logits, arch)
+    smax = s + 2
+
+    def grow(kv):
+        k, v = kv
+        kb = jnp.zeros((k.shape[0], b, smax, *k.shape[3:]), k.dtype)
+        return kb.at[:, :, :s].set(k), jnp.zeros_like(kb).at[:, :, :s].set(v)
+
+    cache = {g: grow(kv) for g, kv in cache.items()}
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    lg, cache = jax.jit(lambda p, c, t: T.decode_step(p, c, t, jnp.int32(s), cfg))(
+        params, cache, tok)
+    assert lg.shape == (b, cfg.vocab)
+    _assert_finite(lg, f"{arch} decode")
+
+
+def test_moe_awpm_router_variant():
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True, router="awpm")
+    params = init_params(build_defs(cfg), jax.random.PRNGKey(0))
+    b, s = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens,
+             "mask": jnp.ones((b, s), jnp.float32)}
+    loss, aux = jax.jit(build_loss(cfg))(params, batch)
+    _assert_finite(loss, "awpm-router")
+
+
+def _gnn_batch(cfg, shape_name):
+    if cfg.kind == "graphcast":
+        return jax.tree.map(jnp.asarray,
+                            G.random_graphcast_batch(120, cfg.opt("n_vars", 12)))
+    coords = cfg.kind in ("dimenet", "equiformer_v2")
+    if shape_name == "molecule":
+        gb = G.random_graph(60, 128, 8, seed=0, coords=coords, n_graphs=4,
+                            triplets=cfg.kind == "dimenet")
+    else:
+        gb = G.random_graph(80, 240, 8, n_classes=7, seed=0, coords=coords,
+                            triplets=cfg.kind == "dimenet")
+    return jax.tree.map(jnp.asarray, gb)
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+@pytest.mark.parametrize("shape_name", ["full_graph_sm", "molecule"])
+def test_gnn_smoke(arch, shape_name):
+    cfg = get_config(arch, reduced=True)
+    shape = ShapeSpec(shape_name, "train", (("d_feat", 8),))
+    defs = build_defs(cfg, shape)
+    params = init_params(defs, jax.random.PRNGKey(0))
+    gb = _gnn_batch(cfg, shape_name)
+    loss_fn = build_loss(cfg)
+    (loss, _), grads = jax.value_and_grad(lambda p: loss_fn(p, gb),
+                                          has_aux=True)(params)
+    _assert_finite(loss, arch)
+    for leaf in jax.tree.leaves(grads):
+        _assert_finite(leaf, f"{arch} grads")
+
+
+def test_gnn_minibatch_sampled_blocks():
+    """graphsage on real sampled blocks (the minibatch_lg regime, reduced)."""
+    from repro.models.gnn.common import GraphBatch
+    from repro.models.gnn.sampler import build_csr, sample_blocks
+
+    cfg = get_config("graphsage-reddit", reduced=True)
+    rng = np.random.default_rng(0)
+    n, e = 2000, 12000
+    src = rng.integers(0, n, e)
+    dst = rng.integers(0, n, e)
+    feats = rng.normal(size=(n, 8)).astype(np.float32)
+    labels = rng.integers(0, 7, n).astype(np.int32)
+    ptr, nbrs = build_csr(n, src, dst)
+    blocks = sample_blocks(ptr, nbrs, rng.integers(0, n, 16), [5, 3], rng)
+    nt = len(blocks.node_ids)
+    gb = GraphBatch(
+        node_feat=jnp.asarray(feats[blocks.node_ids]),
+        edge_src=jnp.asarray(blocks.edge_src),
+        edge_dst=jnp.asarray(blocks.edge_dst),
+        labels=jnp.asarray(labels[blocks.node_ids]),
+    )
+    shape = ShapeSpec("minibatch_lg", "train", (("d_feat", 8),))
+    params = init_params(build_defs(cfg, shape), jax.random.PRNGKey(0))
+    loss, logits = build_loss(cfg)(params, gb)
+    _assert_finite(loss, "sage-minibatch")
+    assert logits.shape == (nt, 41)
+
+
+def test_recsys_smoke():
+    from repro.models.recsys import bert4rec
+
+    cfg = get_config("bert4rec", reduced=True)
+    params = init_params(build_defs(cfg), jax.random.PRNGKey(0))
+    b = 4
+    seq = jax.random.randint(jax.random.PRNGKey(1), (b, cfg.seq_len), 0,
+                             cfg.n_items)
+    batch = {"item_seq": seq, "labels": seq,
+             "mask": (jax.random.uniform(jax.random.PRNGKey(2),
+                                         (b, cfg.seq_len)) < 0.2).astype(
+                 jnp.float32)}
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: build_loss(cfg)(p, batch), has_aux=True)(params)
+    _assert_finite(loss, "bert4rec")
+    scores = bert4rec.serve_scores(params, seq, cfg)
+    assert scores.shape == (b, cfg.padded_items)
+    r = bert4rec.retrieval_scores(params, seq[:1],
+                                  jnp.arange(64, dtype=jnp.int32), cfg)
+    assert r.shape == (1, 64)
+    _assert_finite(r, "retrieval")
+
+
+def test_full_configs_match_assignment():
+    """The FULL configs carry the exact assigned hyperparameters."""
+    c = get_config("qwen2-0.5b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (24, 896, 14, 2, 4864, 151936)
+    c = get_config("qwen1.5-110b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (80, 8192, 64, 8, 49152, 152064)
+    c = get_config("qwen2-7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (28, 3584, 28, 4, 18944, 152064)
+    c = get_config("qwen2-moe-a2.7b")
+    assert (c.n_layers, c.d_model, c.moe.n_experts, c.moe.top_k,
+            c.moe.d_ff_expert, c.vocab, c.moe.n_shared) == (
+        24, 2048, 60, 4, 1408, 151936, 4)
+    c = get_config("deepseek-moe-16b")
+    assert (c.n_layers, c.d_model, c.moe.n_experts, c.moe.top_k,
+            c.moe.d_ff_expert, c.vocab, c.moe.n_shared) == (
+        28, 2048, 64, 6, 1408, 102400, 2)
+    c = get_config("graphsage-reddit")
+    assert (c.n_layers, c.d_hidden) == (2, 128)
+    c = get_config("equiformer-v2")
+    assert (c.n_layers, c.d_hidden, c.opt("l_max"), c.opt("m_max"),
+            c.opt("n_heads")) == (12, 128, 6, 2, 8)
+    c = get_config("dimenet")
+    assert (c.n_layers, c.d_hidden, c.opt("n_bilinear"), c.opt("n_spherical"),
+            c.opt("n_radial")) == (6, 128, 8, 7, 6)
+    c = get_config("graphcast")
+    assert (c.n_layers, c.d_hidden, c.opt("n_vars")) == (16, 512, 227)
+    c = get_config("bert4rec")
+    assert (c.embed_dim, c.n_blocks, c.n_heads, c.seq_len) == (64, 2, 2, 200)
+    assert len(ASSIGNED_ARCHS) == 10

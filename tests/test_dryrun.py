@@ -1,0 +1,68 @@
+"""Dry-run launcher smoke: lower+compile representative cells on the
+production meshes (subprocess — needs 512 fake devices)."""
+import pytest
+
+from _subproc import run_with_devices
+
+SCRIPT = r"""
+import os
+assert os.environ["XLA_FLAGS"].startswith("--xla_force_host_platform_device_count=512")
+from repro.launch.dryrun import run_cell
+for arch, shape, mesh in {cells}:
+    rec = run_cell(arch, shape, mesh, probe=False)
+    assert rec["ok"], (arch, shape, mesh, rec.get("error"))
+    assert rec["chips"] == (512 if mesh == "multi" else 256)
+    assert rec["flops_per_device"] > 0
+    rl = rec["roofline"]
+    assert rl["dominant"] in ("compute", "memory", "collective")
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_dryrun_lm_single_and_multi():
+    cells = [("qwen2-0.5b", "train_4k", "single"),
+             ("qwen2-0.5b", "prefill_32k", "multi")]
+    out = run_with_devices(SCRIPT.format(cells=cells), 512, timeout=1200)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_dryrun_gnn_and_matching():
+    cells = [("graphsage-reddit", "molecule", "single"),
+             ("awpm-matching", "match_4m", "multi")]
+    out = run_with_devices(SCRIPT.format(cells=cells), 512, timeout=1200)
+    assert "OK" in out
+
+
+def test_collective_bytes_parser():
+    from repro.roofline.analysis import collective_bytes, shape_bytes
+
+    assert shape_bytes("f32[2,4,4]") == 128
+    assert shape_bytes("bf16[8]") == 16
+    assert shape_bytes("f32[256,7,4096]{2,1,0}, f32[256,7]") == \
+        256 * 7 * 4096 * 4 + 256 * 7 * 4
+    hlo = """
+  %ag = f32[16,128]{1,0} all-gather(%x), replica_groups={{0,1}}
+  %ar.1 = (f32[4,4]{1,0}, f32[4]{0}) all-reduce(%a, %b), to_apply=%sum
+  %a2a = bf16[2,8]{1,0} all-to-all(%y), dimensions={0}
+  %st = f32[8]{0} all-reduce-start(%z)
+"""
+    out = collective_bytes(hlo)
+    assert out["bytes"]["all-gather"] == 16 * 128 * 4
+    assert out["bytes"]["all-reduce"] == (16 * 4 + 4 * 4) + 8 * 4
+    assert out["bytes"]["all-to-all"] == 2 * 8 * 2
+    assert out["counts"]["all-reduce"] == 2
+
+
+def test_useful_flops_sane():
+    from repro.configs import get_config
+    from repro.configs.base import shapes_for
+    from repro.roofline.analysis import useful_flops
+
+    for arch in ("qwen2-0.5b", "qwen2-moe-a2.7b", "bert4rec",
+                 "graphsage-reddit", "awpm-matching"):
+        cfg = get_config(arch)
+        for s in shapes_for(cfg):
+            mf = useful_flops(arch, s.name, s.mode, cfg, s)
+            assert mf > 0, (arch, s.name)

@@ -1,0 +1,95 @@
+"""Mathematical correctness of model building blocks."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.models.gnn.common import real_spherical_harmonics, sh_degree_index
+from repro.models.layers import rope, softmax_xent
+
+
+def _ref_real_sph_harm(theta, phi, l, m):
+    """Reference real spherical harmonics from scipy's complex Y_lm."""
+    from scipy.special import sph_harm_y
+
+    # scipy: sph_harm_y(l, m, polar, azimuth)
+    y = sph_harm_y(l, abs(m), theta, phi)
+    if m == 0:
+        return y.real
+    if m > 0:
+        return np.sqrt(2) * (-1) ** m * y.real
+    return np.sqrt(2) * (-1) ** m * y.imag
+
+
+@pytest.mark.parametrize("l_max", [2, 4, 6])
+def test_spherical_harmonics_match_scipy(l_max):
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=(50, 3))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    theta = np.arccos(np.clip(v[:, 2], -1, 1))
+    phi = np.arctan2(v[:, 1], v[:, 0])
+    ours = np.array(real_spherical_harmonics(jnp.asarray(v, jnp.float32), l_max))
+    ls, ms = sh_degree_index(l_max)
+    for k, (l, m) in enumerate(zip(ls, ms)):
+        ref = _ref_real_sph_harm(theta, phi, int(l), int(m))
+        # our convention may differ from Condon-Shortley by (-1)^m: compare
+        # up to that fixed sign per (l, m)
+        a, b = ours[:, k], ref
+        sign = np.sign(np.sum(a * b)) or 1.0
+        np.testing.assert_allclose(a, sign * b, rtol=2e-3, atol=2e-3,
+                                   err_msg=f"l={l} m={m}")
+
+
+def test_spherical_harmonics_degree_norm_rotation_invariant():
+    """Sum_m Y_lm(v)^2 is rotation invariant (addition theorem)."""
+    rng = np.random.default_rng(1)
+    v = rng.normal(size=(20, 3))
+    q, _ = np.linalg.qr(rng.normal(size=(3, 3)))
+    l_max = 6
+    ls, _ = sh_degree_index(l_max)
+    y1 = np.array(real_spherical_harmonics(jnp.asarray(v, jnp.float32), l_max))
+    y2 = np.array(real_spherical_harmonics(jnp.asarray(v @ q.T, jnp.float32),
+                                           l_max))
+    for l in range(l_max + 1):
+        sel = ls == l
+        n1 = (y1[:, sel] ** 2).sum(1)
+        n2 = (y2[:, sel] ** 2).sum(1)
+        np.testing.assert_allclose(n1, n2, rtol=1e-3, atol=1e-4)
+        # addition theorem: sum_m |Y_lm|^2 = (2l+1)/4pi
+        np.testing.assert_allclose(n1, (2 * l + 1) / (4 * np.pi), rtol=1e-3)
+
+
+def test_rope_relative_position_property():
+    """<rope(q, p1), rope(k, p2)> depends only on p2 - p1."""
+    rng = np.random.default_rng(2)
+    d = 64
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, d)), jnp.float32)
+
+    def score(p1, p2):
+        qr = rope(q, jnp.full((1, 1), p1, jnp.int32), theta=1e4)
+        kr = rope(k, jnp.full((1, 1), p2, jnp.int32), theta=1e4)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(score(3, 10) - score(103, 110)) < 1e-3
+    assert abs(score(0, 5) - score(40, 45)) < 1e-3
+    assert abs(score(0, 5) - score(0, 6)) > 1e-4  # but not position-free
+
+
+def test_rope_preserves_norm():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(2, 8, 4, 32)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8, dtype=jnp.int32), (2, 8))
+    y = rope(x, pos)
+    np.testing.assert_allclose(np.linalg.norm(np.array(y), axis=-1),
+                               np.linalg.norm(np.array(x), axis=-1), rtol=1e-5)
+
+
+def test_softmax_xent_matches_manual():
+    rng = np.random.default_rng(4)
+    logits = jnp.asarray(rng.normal(size=(6, 10)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, 10, 6), jnp.int32)
+    ours = float(softmax_xent(logits, labels))
+    p = np.exp(np.array(logits) - np.array(logits).max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    ref = -np.mean(np.log(p[np.arange(6), np.array(labels)]))
+    assert abs(ours - ref) < 1e-5

@@ -1,0 +1,61 @@
+"""Static pivoting (paper §6.6): AWPM permutation must rescue a pivot-free LU."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import graph, pivot, ref, single
+
+
+def _ill_system(n=60, seed=0):
+    """Diagonally weak matrix: no-pivot LU is unstable without permutation."""
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(n, n)) * (rng.random((n, n)) < 0.2)
+    # plant a heavy off-diagonal perfect matching
+    perm = rng.permutation(n)
+    a[perm, np.arange(n)] = rng.uniform(5.0, 10.0, n) * rng.choice([-1, 1], n)
+    np.fill_diagonal(a, rng.uniform(0, 1e-8, n))  # tiny diagonal
+    x_true = np.ones(n)
+    return a, a @ x_true, x_true
+
+
+def test_awpm_pivoting_recovers_solution():
+    a, b, x_true = _ill_system()
+    n = a.shape[0]
+    a_s, _, _ = pivot.equilibrate(a)
+    rr, cc = np.nonzero(a_s)
+    g = graph.from_coo(rr.astype(np.int32), cc.astype(np.int32),
+                       np.abs(a_s[rr, cc]).astype(np.float32), n, pad_align=8)
+    st, _ = single.awpm(jnp.asarray(g.row), jnp.asarray(g.col), jnp.asarray(g.val), n)
+    mr = np.array(st.mate_row[:n])
+    x = pivot.static_pivot_solve(a, b, mr)
+    err = pivot.relative_error(x, x_true)
+    assert err < 1e-6, f"AWPM static pivoting failed: err={err}"
+
+
+def test_awpm_permutation_close_to_exact_mwpm_quality():
+    a, b, x_true = _ill_system(seed=3)
+    n = a.shape[0]
+    a_s, _, _ = pivot.equilibrate(a)
+    rr, cc = np.nonzero(a_s)
+    vals = np.abs(a_s[rr, cc]).astype(np.float32)
+    g = graph.from_coo(rr.astype(np.int32), cc.astype(np.int32), vals, n)
+    # product metric (MC64 option 5 analogue): log weights
+    glog = pivot.log_transformed(g)
+    st, _ = single.awpm(jnp.asarray(glog.row), jnp.asarray(glog.col),
+                        jnp.asarray(glog.val), n)
+    mr = np.array(st.mate_row[:n])
+    dense_log = np.where(g.structure_dense(),
+                         np.log(np.maximum(np.abs(g.to_dense()), 1e-30)), 0.0)
+    struct = g.structure_dense()
+    _, opt = ref.exact_mwpm(dense_log.astype(np.float32), struct)
+    w = float(np.sum(dense_log[mr, np.arange(n)]))
+    # log-weights are negative, so the 2/3 *ratio* guarantee does not apply in
+    # log space; require the diagonal PRODUCT within 2x of the optimal product
+    # (paper Table 6.3 shows MC64/AWPM products agree on most but not all
+    # systems — e.g. circuit5M differs).
+    assert np.exp(w - opt) >= 0.5
+
+
+def test_lu_nopivot_known():
+    a = np.array([[4.0, 3.0], [6.0, 3.0]])
+    ell, u = pivot.lu_nopivot(a)
+    np.testing.assert_allclose(ell @ u, a, rtol=1e-12)

@@ -1,0 +1,96 @@
+"""Hypothesis property tests on the matching system's invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph, ref, single
+from repro.sparse.ops import lex_searchsorted
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def planted_graph(draw):
+    n = draw(st.integers(8, 40))
+    deg = draw(st.floats(2.0, 6.0))
+    kind = draw(st.sampled_from(["uniform", "circuit", "antigreedy", "banded"]))
+    seed = draw(st.integers(0, 10_000))
+    return graph.generate(n, avg_degree=deg, kind=kind, seed=seed)
+
+
+@given(planted_graph())
+@settings(**SET)
+def test_awpm_perfect_valid_and_two_thirds_optimal(g):
+    dense = g.to_dense().astype(np.float32)
+    struct = g.structure_dense()
+    st_, iters = single.awpm(jnp.asarray(g.row), jnp.asarray(g.col),
+                             jnp.asarray(g.val), g.n)
+    mr = np.array(st_.mate_row[: g.n])
+    mc = np.array(st_.mate_col[: g.n])
+    ref.check_matching(struct, mr)
+    assert ref.is_perfect(mr, g.n)
+    # Pettie-Sanders: no augmenting 4-cycle => >= 2/3-optimal
+    assert ref.find_augmenting_4cycle(dense, struct, mr, mc) is None
+    _, opt = ref.exact_mwpm(dense, struct)
+    w = float(single.matching_weight(st_, g.n))
+    assert w >= (2.0 / 3.0) * opt - 1e-4
+
+
+@given(planted_graph())
+@settings(**SET)
+def test_awac_round_never_decreases_weight_and_stays_perfect(g):
+    dense = g.to_dense().astype(np.float32)
+    struct = g.structure_dense()
+    mr, mc = ref.greedy_maximal(dense, struct)
+    mr, mc = ref.mcm_kuhn(dense, struct, mr, mc)
+    w_prev = ref.matching_weight(dense, mr)
+    for _ in range(50):
+        surv, n_cand = ref.awac_round_select(dense, struct, mr, mc)
+        if not surv:
+            break
+        mr, mc = ref.apply_cycles(mr, mc, surv)
+        ref.check_matching(struct, mr)
+        assert ref.is_perfect(mr, g.n)
+        w = ref.matching_weight(dense, mr)
+        assert w > w_prev - 1e-6
+        w_prev = w
+
+
+@given(planted_graph())
+@settings(**SET)
+def test_survivor_cycles_are_vertex_disjoint(g):
+    dense = g.to_dense().astype(np.float32)
+    struct = g.structure_dense()
+    mr, mc = ref.greedy_maximal(dense, struct)
+    mr, mc = ref.mcm_kuhn(dense, struct, mr, mc)
+    surv, _ = ref.awac_round_select(dense, struct, mr, mc)
+    rows, cols = set(), set()
+    for i, j in surv:
+        r2, c2 = mr[j], mc[i]
+        for r in (i, r2):
+            assert r not in rows
+            rows.add(r)
+        for c in (j, c2):
+            assert c not in cols
+            cols.add(c)
+
+
+@given(
+    st.lists(st.tuples(st.integers(0, 30), st.integers(0, 30)), min_size=1,
+             max_size=60),
+    st.lists(st.tuples(st.integers(0, 31), st.integers(0, 31)), min_size=1,
+             max_size=20),
+)
+@settings(**SET)
+def test_lex_searchsorted_matches_python(pairs, queries):
+    pairs = sorted(set(pairs))
+    kr = jnp.array([p[0] for p in pairs], jnp.int32)
+    kc = jnp.array([p[1] for p in pairs], jnp.int32)
+    qr = jnp.array([q[0] for q in queries], jnp.int32)
+    qc = jnp.array([q[1] for q in queries], jnp.int32)
+    pos, found = lex_searchsorted(kr, kc, qr, qc)
+    pset = set(pairs)
+    for k, q in enumerate(queries):
+        assert bool(found[k]) == (q in pset)
+        if q in pset:
+            assert pairs[int(pos[k])] == q

@@ -1,0 +1,140 @@
+"""Training loop, optimizer, checkpoint, elastic, straggler, compression."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.runtime.straggler import StragglerMonitor
+from repro.training.grad_compression import (
+    CompressedState, compress_topk, init_state, quantize_int8, dequantize_int8,
+)
+from repro.training.loop import make_train_step, train
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def _quad_loss(params, batch):
+    pred = batch["x"] @ params["w"] + params["b"]
+    loss = jnp.mean((pred - batch["y"]) ** 2)
+    return loss, {}
+
+
+def _toy_params(key):
+    k1, k2 = jax.random.split(key)
+    return {"w": jax.random.normal(k1, (4, 2)), "b": jnp.zeros((2,))}
+
+
+def _toy_batch(step):
+    rng = np.random.default_rng(step)
+    x = rng.normal(size=(16, 4)).astype(np.float32)
+    w_true = np.array([[1.0, -1], [2, 0.5], [-0.5, 1], [0, 2]], np.float32)
+    return {"x": x, "y": x @ w_true}
+
+
+def test_train_step_reduces_loss():
+    params = _toy_params(jax.random.PRNGKey(0))
+    cfg = AdamWConfig(lr=5e-2, warmup_steps=5, total_steps=200, weight_decay=0.0)
+    step = jax.jit(make_train_step(_quad_loss, cfg))
+    opt = init_opt_state(params)
+    batch = jax.tree.map(jnp.asarray, _toy_batch(0))
+    l0 = float(_quad_loss(params, batch)[0])
+    for i in range(100):
+        params, opt, m = step(params, opt, jax.tree.map(jnp.asarray, _toy_batch(i)))
+    assert float(m["loss"]) < 0.1 * l0
+
+
+def test_grad_accum_matches_full_batch():
+    params = _toy_params(jax.random.PRNGKey(1))
+    cfg = AdamWConfig(lr=1e-2, weight_decay=0.0, clip_norm=1e9)
+    batch = jax.tree.map(jnp.asarray, _toy_batch(3))
+    s1 = make_train_step(_quad_loss, cfg)
+    s4 = make_train_step(_quad_loss, cfg, grad_accum=4)
+    p1, _, m1 = s1(params, init_opt_state(params), batch)
+    p4, _, m4 = s4(params, init_opt_state(params), batch)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-5, atol=1e-6)
+
+
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    params = _toy_params(jax.random.PRNGKey(2))
+    opt = init_opt_state(params)
+    mgr = CheckpointManager(tmp_path, keep=2)
+    mgr.save(10, params, opt)
+    mgr.save(20, params, opt)
+    mgr.save(30, params, opt)
+    assert mgr.list_steps() == [20, 30]  # keep=2 gc'd step 10
+    p2, o2, step = mgr.restore_latest(like={"params": params, "opt": opt})
+    assert step == 30
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.array(a), np.array(b))
+    # a stale .tmp dir must not be listed as a checkpoint
+    (tmp_path / "step_000000040.tmp").mkdir()
+    assert mgr.list_steps() == [20, 30]
+
+
+def test_checkpoint_async(tmp_path):
+    params = _toy_params(jax.random.PRNGKey(3))
+    mgr = CheckpointManager(tmp_path, async_save=True)
+    mgr.save(1, params)
+    mgr.wait()
+    assert mgr.list_steps() == [1]
+
+
+def test_train_loop_restores_from_checkpoint(tmp_path):
+    params = _toy_params(jax.random.PRNGKey(4))
+    cfg = AdamWConfig(lr=1e-2)
+    mgr = CheckpointManager(tmp_path)
+    p1, o1, hist = train(params, _quad_loss, _toy_batch, cfg, n_steps=6,
+                         checkpoint_mgr=mgr, checkpoint_every=2, log_every=100)
+    assert mgr.list_steps()
+    # second run resumes from the saved step
+    p2, o2, hist2 = train(params, _quad_loss, _toy_batch, cfg, n_steps=6,
+                          checkpoint_mgr=mgr, checkpoint_every=2, log_every=100)
+    assert int(o2.step) >= int(o1.step) - 4
+
+
+def test_straggler_monitor_flags_slow_rank():
+    mon = StragglerMonitor(warmup=3)
+    for step in range(10):
+        for rank in range(8):
+            mon.record(step, 1.0 + (5.0 if rank == 3 else 0.0), rank)
+    assert mon.slow_ranks() == [3]
+
+
+def test_int8_quant_roundtrip():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(128,)), jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.array(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.51 + 1e-6
+
+
+def test_topk_error_feedback_converges():
+    # error feedback: sum of compressed grads over steps ~ sum of true grads
+    g = jnp.asarray(np.random.default_rng(1).normal(size=(256,)), jnp.float32)
+    grads = {"g": g}
+    state = init_state(grads)
+    acc = jnp.zeros_like(g)
+    n = 200
+    for _ in range(n):
+        out, state = compress_topk(grads, state, k_frac=0.1)
+        acc = acc + out["g"]
+    # error feedback bounds the residual, so the time-average converges to g
+    np.testing.assert_allclose(np.array(acc / n), np.array(g), atol=0.1)
+
+
+def test_elastic_mesh_shrink():
+    # simulated: 4x2 grid, kill one device -> its data row is dropped
+    from repro.runtime import elastic
+
+    devs = np.array(jax.devices() * 8)[:8].reshape(4, 2)
+
+    class FakeDev:
+        def __init__(self, i):
+            self.id = i
+
+    grid = np.array([[FakeDev(r * 2 + c) for c in range(2)] for r in range(4)])
+    fleet = elastic.FleetState(grid, np.ones(8, bool))
+    fleet = elastic.fail_hosts(fleet, [5])  # device in row 2
+    alive = fleet.alive.reshape(4, 2)
+    rows_ok = alive.all(axis=1)
+    assert rows_ok.tolist() == [True, True, False, True]
