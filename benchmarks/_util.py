@@ -2,6 +2,10 @@ import time
 
 import jax
 
+# Rows emitted by the currently-running suite (drained by benchmarks.run to
+# persist each suite's results into BENCH_<suite>.json at the repo root).
+_ROWS = []
+
 
 def time_call(fn, *args, iters=3, warmup=1):
     for _ in range(warmup):
@@ -16,3 +20,11 @@ def time_call(fn, *args, iters=3, warmup=1):
 
 def row(name, us, derived=""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+    _ROWS.append({"name": name, "us_per_call": round(float(us), 1),
+                  "derived": derived})
+
+
+def drain_rows():
+    rows = list(_ROWS)
+    _ROWS.clear()
+    return rows

@@ -1,6 +1,8 @@
 """Kernel micro-benchmarks: Pallas (interpret mode — correctness-grade
 timings on CPU; the TPU perf story lives in the roofline analysis) vs jnp
-reference, plus arithmetic-intensity derivations for the v5e roofline."""
+reference, plus arithmetic-intensity derivations for the v5e roofline, plus
+the end-to-end AWAC iterations/sec contest between the seed implementation
+and the fused sparse sweep engine (DESIGN.md §3)."""
 import numpy as np
 import jax.numpy as jnp
 
@@ -10,7 +12,40 @@ from repro.kernels.flash_attention import attention_ref, flash_attention
 from benchmarks._util import row, time_call
 
 
+def bench_awac_sweep(n: int = 2048, avg_degree: float = 8.0):
+    """End-to-end AWAC on a synthetic n x n instance: seed reference path vs
+    the fused sweep engine (CSR-windowed lookup + packed-key Step C). Both
+    run the identical select/augment tail and must converge to the same
+    matching weight; reports per-iteration time and iterations/sec."""
+    from repro.core import graph, single
+
+    g = graph.generate(n, avg_degree=avg_degree, kind="uniform", seed=0)
+    r, c, v = jnp.asarray(g.row), jnp.asarray(g.col), jnp.asarray(g.val)
+    st = single.greedy_maximal(r, c, v, g.n)
+    st = single.mcm(r, c, v, g.n, st.mate_row, st.mate_col)
+
+    results = {}
+    for backend in ("reference", "xla", "pallas"):
+        dt, (stf, iters) = time_call(
+            lambda b=backend: single.awac(r, c, v, g.n, st, backend=b),
+            iters=3, warmup=1,
+        )
+        iters = int(iters)
+        w = float(single.matching_weight(stf, g.n))
+        results[backend] = (dt / max(iters, 1), w)
+        row(f"awac_iter_{backend}_n{n}", dt / max(iters, 1) * 1e6,
+            f"iters={iters};iters_per_s={iters / dt:.1f};weight={w:.4f}")
+    ref_it, ref_w = results["reference"]
+    fused_it, fused_w = results["xla"]
+    speedup = ref_it / fused_it
+    row(f"awac_fused_speedup_n{n}", fused_it * 1e6,
+        f"speedup_vs_reference={speedup:.2f}x;"
+        f"weight_identical={abs(ref_w - fused_w) == 0.0}")
+    return speedup
+
+
 def run():
+    bench_awac_sweep()
     rng = np.random.default_rng(0)
     # cycle_gain: M=N=512 dense tile
     m = n = 512

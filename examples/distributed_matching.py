@@ -10,15 +10,22 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-from jax.sharding import AxisType  # noqa: E402
+
+try:  # jax >= 0.6
+    from jax.sharding import AxisType  # noqa: E402
+except ImportError:  # jax 0.4.x: axes are Auto already
+    AxisType = None
 
 from repro.core import graph, ref, single  # noqa: E402
 from repro.core.dist import DistAWPM, GridSpec, default_caps  # noqa: E402
 
 
 def main(n=256, degree=8.0, seed=0):
-    mesh = jax.make_mesh((4, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    if AxisType is None:
+        mesh = jax.make_mesh((4, 4), ("data", "model"))
+    else:
+        mesh = jax.make_mesh((4, 4), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2)
     spec = GridSpec(mesh, ("data",), "model")
     g = graph.generate(n, avg_degree=degree, kind="uniform", seed=seed)
     print(f"matrix n={g.n} nnz={g.nnz} on a {spec.pr}x{spec.pc} process grid "

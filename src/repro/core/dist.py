@@ -28,12 +28,26 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 from jax.sharding import PartitionSpec as P
 
 from repro.core import single
 from repro.core.single import MatchState, NEG, MIN_GAIN
-from repro.sparse.ops import lex_searchsorted, segment_argmax_tie, segment_max_with_payload
+from repro.sparse.csr import max_row_nnz, window_depth
+from repro.sparse.ops import (
+    lex_searchsorted,
+    searchsorted_in_window,
+    segment_argmax_tie,
+    segment_max_with_payload,
+)
 from repro.sparse.partition import partition_coo_2d
+
+try:  # jax >= 0.6 spelling
+    _shard_map = functools.partial(jax.shard_map, check_vma=False)
+except AttributeError:  # jax 0.4.x: experimental module, check_rep kwarg
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    _shard_map = functools.partial(_shard_map_exp, check_rep=False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,7 +103,8 @@ def a2a_bucketed(arrays, fills, dest, valid, n_peers: int, cap_out: int,
     posin = jnp.arange(L, dtype=jnp.int32) - start[jnp.clip(ds, 0, n_peers - 1)].astype(jnp.int32)
     ok = (ds < n_peers) & (posin < cap_out)
     slot = jnp.where(ok, ds.astype(jnp.int32) * cap_out + posin, n_peers * cap_out)
-    dropped = (ds < n_peers).sum() - ok.sum()
+    # explicit i32: bool sums would widen to i64 under an x64-enabled trace
+    dropped = ((ds < n_peers).sum() - ok.sum()).astype(jnp.int32)
 
     def fill_buf(a, fv):
         buf = jnp.full((n_peers * cap_out + 1,), fv, a.dtype)
@@ -144,9 +159,19 @@ def _lex_pick(G, TIE, payloads, tie_fill):
 
 def make_dist_awac(spec: GridSpec, n: int, cap: int, a2a_caps: tuple[int, int],
                    max_iter: int = 1000, min_gain: float = MIN_GAIN,
-                   packed: bool = False):
+                   packed: bool = False, backend: str = "fused",
+                   window_steps: int | None = None):
     """Build the jitted distributed AWAC. Inputs: blocks [Pr, Pc, cap] (row,
-    col, val) + replicated MatchState. Returns (state, iters, dropped)."""
+    col, val) + replicated MatchState. Returns (state, iters, dropped).
+
+    backend "fused" (default) runs the sweep engine's CSR-windowed local
+    join: each block builds its per-row ``row_ptr`` once, and the Step-A
+    completion lookup searches only inside row ``qi``'s short segment
+    (``window_steps`` rounds ~ log2(max block-row degree), vs log2(cap) for
+    the seed's global per-block lex search). "reference" keeps the seed
+    path. Both are bit-identical; callers wrap the run in ``enable_x64`` to
+    additionally collapse Step C's reductions into packed-key single passes.
+    """
     pr, pc = spec.pr, spec.pc
     br = -(-n // pr)
     bc = -(-n // pc)
@@ -154,12 +179,23 @@ def make_dist_awac(spec: GridSpec, n: int, cap: int, a2a_caps: tuple[int, int],
     row_axes = spec.row_axes if len(spec.row_axes) > 1 else spec.row_axes[0]
     col_axis = spec.col_axis
     all_axes = tuple(spec.row_axes) + (spec.col_axis,)
+    if window_steps is None:
+        window_steps = _search_depth(cap)
 
     def block_fn(brow, bcol, bval, mate_row, mate_col, u, v):
         brow = brow.reshape(-1)
         bcol = bcol.reshape(-1)
         bval = bval.reshape(-1)
         b = jax.lax.axis_index(col_axis)
+        a = jax.lax.axis_index(row_axes)
+        if backend == "fused":
+            # One-time per-block CSR row_ptr over the block's global rows
+            # [a*br, (a+1)*br); the padding tail (row == n) sits beyond
+            # bptr[br]. Loop-invariant, hoisted out of the AWAC rounds.
+            bptr = jnp.searchsorted(
+                brow, a * br + jnp.arange(br + 1, dtype=brow.dtype),
+                side="left",
+            ).astype(jnp.int32)
 
         def round_body(carry):
             state, it, _, drop_acc = carry
@@ -179,9 +215,18 @@ def make_dist_awac(spec: GridSpec, n: int, cap: int, a2a_caps: tuple[int, int],
                 o_i // br, v1, pr, cap2, row_axes, packed=packed,
             )
             # ---- local join: does candidate edge (qi, qj) exist in my block?
-            # (§Perf M2: search depth ceil(log2(cap)) instead of fixed 32)
-            pos, found = lex_searchsorted(brow, bcol, qi, qj,
-                                          n_steps=_search_depth(cap))
+            if backend == "fused":
+                li = jnp.clip(qi - a * br, 0, br - 1)
+                in_row = qvalid & (qi - a * br == li)
+                lo = bptr[li]
+                hi = jnp.where(in_row, bptr[li + 1], lo)
+                pos, found = searchsorted_in_window(
+                    bcol, qj, lo, hi, n_steps=window_steps
+                )
+            else:
+                # (§Perf M2: search depth ceil(log2(cap)) instead of fixed 32)
+                pos, found = lex_searchsorted(brow, bcol, qi, qj,
+                                              n_steps=_search_depth(cap))
             w1 = bval[jnp.clip(pos, 0, brow.shape[0] - 1)]
             gain = w1 + qw2 - u[qi] - v[qj]
             cand = qvalid & found & (qi > mate_row[qj]) & (gain > min_gain)
@@ -226,12 +271,11 @@ def make_dist_awac(spec: GridSpec, n: int, cap: int, a2a_caps: tuple[int, int],
         return state.mate_row, state.mate_col, state.u, state.v, iters, dropped
 
     blk = spec.block_spec()
-    fn = jax.shard_map(
+    fn = _shard_map(
         block_fn,
         mesh=spec.mesh,
         in_specs=(blk, blk, blk, P(), P(), P(), P()),
         out_specs=(P(), P(), P(), P(), P(), P()),
-        check_vma=False,
     )
 
     @jax.jit
@@ -294,11 +338,10 @@ def make_dist_greedy_maximal(spec: GridSpec, n: int, cap: int, max_rounds: int =
         return mate_row, mate_col
 
     blk = spec.block_spec()
-    fn = jax.shard_map(
+    fn = _shard_map(
         block_fn, mesh=spec.mesh,
         in_specs=(blk, blk, blk, P(), P()),
         out_specs=(P(), P()),
-        check_vma=False,
     )
 
     @jax.jit
@@ -390,11 +433,10 @@ def make_dist_mcm(spec: GridSpec, n: int, cap: int):
         return mate_row, mate_col
 
     blk = spec.block_spec()
-    fn = jax.shard_map(
+    fn = _shard_map(
         block_fn, mesh=spec.mesh,
         in_specs=(blk, blk, blk, P(), P()),
         out_specs=(P(), P()),
-        check_vma=False,
     )
 
     @jax.jit
@@ -421,17 +463,26 @@ class DistAWPM:
     max_iter: int = 1000
     min_gain: float = MIN_GAIN
     packed: bool = False
+    backend: str = "fused"
 
     def __post_init__(self):
         self._greedy = make_dist_greedy_maximal(self.spec, self.n, self.cap)
         self._mcm = make_dist_mcm(self.spec, self.n, self.cap)
-        self._awac = make_dist_awac(
-            self.spec, self.n, self.cap, self.a2a_caps, self.max_iter,
-            self.min_gain, packed=self.packed,
-        )
+        self._awac_cache = {}
+
+    def _get_awac(self, window_steps: int | None):
+        key = window_steps
+        if key not in self._awac_cache:
+            self._awac_cache[key] = make_dist_awac(
+                self.spec, self.n, self.cap, self.a2a_caps, self.max_iter,
+                self.min_gain, packed=self.packed, backend=self.backend,
+                window_steps=window_steps,
+            )
+        return self._awac_cache[key]
 
     def partition(self, g):
-        """BipartiteGraph -> device-sharded block arrays."""
+        """BipartiteGraph -> device-sharded block arrays (plus the static
+        windowed-search depth measured from the partition's block rows)."""
         m = np.arange(g.capacity) < g.nnz
         part = partition_coo_2d(
             g.row[m], g.col[m], g.val[m], self.n, self.spec.pr, self.spec.pc,
@@ -441,11 +492,14 @@ class DistAWPM:
         brow = jax.device_put(part.row, sharding)
         bcol = jax.device_put(part.col, sharding)
         bval = jax.device_put(part.val, sharding)
-        return brow, bcol, bval
+        # max nonzeros any (block, row) pair holds -> windowed search depth
+        rows = part.row.reshape(part.row.shape[0] * part.row.shape[1], -1)
+        widest = max(max_row_nnz(blk_rows, self.n) for blk_rows in rows)
+        return brow, bcol, bval, window_depth(widest)
 
     def run(self, g, state: MatchState | None = None):
         """Returns (state, awac_iters, dropped)."""
-        brow, bcol, bval = self.partition(g)
+        brow, bcol, bval, ws = self.partition(g)
         if state is None:
             mr, mc = self._greedy(brow, bcol, bval)
             mr, mc = self._mcm(brow, bcol, bval, mr, mc)
@@ -454,7 +508,12 @@ class DistAWPM:
             col = jnp.asarray(g.col)
             val = jnp.asarray(g.val)
             state = single.state_from_mates(row, col, val, self.n, mr, mc)
-        return self._awac(brow, bcol, bval, state)
+        awac = self._get_awac(ws if self.backend == "fused" else None)
+        if self.backend == "fused":
+            # Packed-key single-pass Step C reductions (repro.sparse.ops)
+            with enable_x64():
+                return awac(brow, bcol, bval, state)
+        return awac(brow, bcol, bval, state)
 
 
 def default_caps(n: int, m: int, pr: int, pc: int, slack: float = 2.0):

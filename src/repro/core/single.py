@@ -24,11 +24,21 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import enable_x64
 
-from repro.sparse.ops import lex_searchsorted, segment_max_with_payload
+from repro.sparse.csr import max_row_nnz, row_ptr_from_sorted, window_depth
+from repro.sparse.ops import (
+    lex_searchsorted,
+    searchsorted_in_window,
+    segment_max_with_payload,
+)
 
 NEG = -jnp.inf
 MIN_GAIN = 1e-6
+
+# Fallback windowed-search depth when the row array is a tracer and the max
+# row degree cannot be measured on the host (covers any int32-sized window).
+FALLBACK_WINDOW_STEPS = 32
 
 
 class MatchState(NamedTuple):
@@ -285,7 +295,11 @@ def select_and_augment(n, Cgain, Ci, Cw1, Cw2, state: MatchState, min_gain):
 
 
 def awac_candidates(row, col, val, n, state: MatchState, min_gain):
-    """Steps A+B on the full edge list: per-edge completion lookup + gain."""
+    """Steps A+B on the full edge list: per-edge completion lookup + gain.
+
+    Reference path: global log2(m)-round lex search per edge. The fused sweep
+    (``awac_cwinners_fused`` / the Pallas ``awac_sweep`` kernel) replaces this
+    with a CSR-windowed lookup and never materializes these O(m) arrays."""
     mate_row, mate_col, u, v = state
     qr = mate_row[col]  # m_j for each edge's column
     qc = mate_col[row]  # m_i for each edge's row
@@ -297,7 +311,10 @@ def awac_candidates(row, col, val, n, state: MatchState, min_gain):
 
 
 def awac_cwinners(row, col, val, n, state: MatchState, min_gain):
-    """Step C on the full edge list: per-column winner (gain, i, w1, w2)."""
+    """Step C on the full edge list: per-column winner (gain, i, w1, w2).
+
+    Reference (seed) implementation — kept as the bit-exactness oracle for
+    the fused backends and still used via ``backend="reference"``."""
     cand, gain, w2 = awac_candidates(row, col, val, n, state, min_gain)
     cap = row.shape[0]
     eidx = jnp.arange(cap, dtype=jnp.int32)
@@ -313,14 +330,86 @@ def awac_cwinners(row, col, val, n, state: MatchState, min_gain):
     return Cgain, Ci, Cw1, Cw2
 
 
-@functools.partial(jax.jit, static_argnames=("n", "max_iter"))
-def awac(row, col, val, n: int, state: MatchState, max_iter: int = 1000,
-         min_gain: float = MIN_GAIN):
-    """Full AWAC loop. Returns (state, iters)."""
+def awac_cwinners_fused(row, col, val, row_ptr, n, state: MatchState, min_gain,
+                        window_steps: int):
+    """Fused Steps A+B+C, XLA path (DESIGN.md §3).
 
+    The completion lookup for (m_j, m_i) is a windowed binary search inside
+    row m_j's CSR segment (``window_steps`` rounds ~ log2(max row degree))
+    instead of a log2(m)-round global lex search, and Step C's winner
+    selection runs as a single packed-key segment reduction when the caller
+    traced under x64 (``awac``/``awpm`` do). Bit-identical to
+    ``awac_cwinners``."""
+    mate_row, mate_col, u, v = state
+    cap = row.shape[0]
+    qr = mate_row[col]  # m_j for each edge's column
+    qc = mate_col[row]  # m_i for each edge's row
+    qr_s = jnp.clip(qr, 0, n)
+    lo = row_ptr[qr_s]
+    # qr == n (unmatched column / padding edge) -> empty window, never found;
+    # the reference can "find" the padding entry there but masks it with
+    # row < n, so candidate sets agree.
+    hi = jnp.where(qr < n, row_ptr[qr_s + 1], lo)
+    pos, found = searchsorted_in_window(col, qc, lo, hi, n_steps=window_steps)
+    w2 = jnp.where(found, val[jnp.clip(pos, 0, cap - 1)], 0.0)
+    gain = val + w2 - u[row] - v[col]
+    cand = found & (row < n) & (row > qr) & (gain > min_gain)
+    eidx = jnp.arange(cap, dtype=jnp.int32)
+    seg = jnp.where(cand, col, n)
+    gm = jnp.where(cand, gain, NEG)
+    Cgain_full, Cedge = segment_max_with_payload(gm, eidx, seg, n + 1)
+    Cgain, Cedge = Cgain_full[:n], Cedge[:n]
+    ce = jnp.clip(Cedge, 0)
+    has = Cedge >= 0
+    Ci = jnp.where(has, row[ce], n).astype(jnp.int32)
+    Cw1 = jnp.where(has, val[ce], 0.0)
+    Cw2 = jnp.where(has, w2[ce], 0.0)
+    return Cgain, Ci, Cw1, Cw2
+
+
+def _cwinners(backend, row, col, val, row_ptr, n, state, min_gain,
+              window_steps):
+    if backend == "reference":
+        return awac_cwinners(row, col, val, n, state, min_gain)
+    if backend == "xla":
+        return awac_cwinners_fused(row, col, val, row_ptr, n, state, min_gain,
+                                   window_steps)
+    if backend == "pallas":
+        # Local import: core must stay importable without the kernel package.
+        from repro.kernels.cycle_gain.ops import awac_sweep_winners
+
+        return awac_sweep_winners(
+            row, col, val, row_ptr, state.mate_row, state.mate_col, state.u,
+            state.v, min_gain, n=n, window_steps=window_steps,
+        )
+    raise ValueError(f"unknown AWAC backend {backend!r}")
+
+
+def resolve_backend(backend: str) -> str:
+    """'auto' -> compiled Pallas sweep on TPU, fused XLA path elsewhere."""
+    if backend != "auto":
+        return backend
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _resolve_window_steps(row, n, window_steps):
+    if window_steps is not None:
+        return int(window_steps)
+    if isinstance(row, jax.core.Tracer):
+        return FALLBACK_WINDOW_STEPS
+    return window_depth(max_row_nnz(row, n))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "max_iter", "backend", "window_steps")
+)
+def _awac_loop(row, col, val, row_ptr, n: int, state: MatchState,
+               max_iter: int, min_gain, backend: str, window_steps: int):
     def body(carry):
         state, it, _ = carry
-        Cgain, Ci, Cw1, Cw2 = awac_cwinners(row, col, val, n, state, min_gain)
+        Cgain, Ci, Cw1, Cw2 = _cwinners(
+            backend, row, col, val, row_ptr, n, state, min_gain, window_steps
+        )
         state, n_surv = select_and_augment(n, Cgain, Ci, Cw1, Cw2, state, min_gain)
         return state, it + 1, n_surv > 0
 
@@ -334,8 +423,33 @@ def awac(row, col, val, n: int, state: MatchState, max_iter: int = 1000,
     return state, iters
 
 
-def awpm(row, col, val, n: int, max_iter: int = 1000, min_gain: float = MIN_GAIN):
+def awac(row, col, val, n: int, state: MatchState, max_iter: int = 1000,
+         min_gain: float = MIN_GAIN, backend: str = "auto",
+         row_ptr=None, window_steps: int | None = None):
+    """Full AWAC loop. Returns (state, iters).
+
+    backend: "auto" | "xla" (fused sweep, default off-TPU) | "pallas"
+    (fused ``awac_sweep`` kernel, default on TPU) | "reference" (seed jnp
+    path, the bit-exactness oracle). All backends produce identical results.
+    """
+    backend = resolve_backend(backend)
+    window_steps = _resolve_window_steps(row, n, window_steps)
+    if row_ptr is None:
+        row_ptr = row_ptr_from_sorted(row, n)
+    if backend == "xla":
+        # x64-enabled trace context lets Step C run as ONE packed-key uint64
+        # segment_max (see repro.sparse.ops); inputs/outputs stay f32/i32.
+        with enable_x64():
+            return _awac_loop(row, col, val, row_ptr, n, state, max_iter,
+                              min_gain, backend, window_steps)
+    return _awac_loop(row, col, val, row_ptr, n, state, max_iter, min_gain,
+                      backend, window_steps)
+
+
+def awpm(row, col, val, n: int, max_iter: int = 1000, min_gain: float = MIN_GAIN,
+         backend: str = "auto"):
     """Full pipeline: greedy maximal -> MCM -> AWAC. Returns (state, awac_iters)."""
     st = greedy_maximal(row, col, val, n)
     st = mcm(row, col, val, n, st.mate_row, st.mate_col)
-    return awac(row, col, val, n, st, max_iter=max_iter, min_gain=min_gain)
+    return awac(row, col, val, n, st, max_iter=max_iter, min_gain=min_gain,
+                backend=backend)

@@ -1,0 +1,18 @@
+"""Kernel execution-mode selection shared by all Pallas kernel wrappers.
+
+``interpret=None`` everywhere means "auto": run the compiled Mosaic kernel on
+TPU, fall back to the Pallas interpreter elsewhere (CPU CI, unit tests). The
+old hard-coded ``interpret=True`` default meant a TPU run silently executed
+the interpreter; flipping to auto-detection makes the compiled path the
+default where it exists while keeping every other environment working.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Explicit True/False wins; None auto-detects from the default backend."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -1,3 +1,4 @@
+from repro.kernels.cycle_gain.awac_sweep import awac_sweep
 from repro.kernels.cycle_gain.cycle_gain import cycle_gain
-from repro.kernels.cycle_gain.ops import cycle_gain_padded
+from repro.kernels.cycle_gain.ops import awac_sweep_winners, cycle_gain_padded
 from repro.kernels.cycle_gain.ref import cycle_gain_ref

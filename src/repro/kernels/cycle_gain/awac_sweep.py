@@ -1,0 +1,146 @@
+"""Pallas kernel for the fused sparse AWAC sweep: Steps A+B+C in one pass.
+
+Per CSR-tiled edge block (DESIGN.md §3) the kernel fuses
+  A: completion lookup of (m_j, m_i) — a *windowed* binary search inside row
+     m_j's CSR segment of the lex-sorted edge list (row_ptr windows),
+  B: cycle gain  w1 + w2 - u[i] - v[j]  and the candidate mask
+     ``found & i < n & i > m_j & gain > min_gain``,
+  C: the per-column winner accumulation (gain, row, w1, w2) with
+     smallest-row tie-break,
+entirely on-chip: the per-edge ``gain``/``w2``/``cand`` arrays live only in
+VMEM registers for the current tile and are never written to HBM. The winner
+arrays are VMEM-resident outputs revisited by every grid step (same
+accumulate-in-place pattern as the dense ``cycle_gain`` kernel).
+
+Sizing: the full ``col``/``val`` arrays plus the O(n) matching state stay
+resident in VMEM (cap * 8 B + ~6n * 4 B — e.g. 160 KB for n = 2048 at
+8 nnz/row), while the per-edge streams are pipelined in (1, te) tiles.
+Column ``n`` doubles as the scatter dump slot for masked-out lanes, mirroring
+the XLA path's segment-id padding convention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = float("-inf")
+BIG = jnp.iinfo(jnp.int32).max
+
+
+def _kernel(row_ref, col_ref, val_ref, colf_ref, valf_ref, ptr_ref, mr_ref,
+            mc_ref, u_ref, v_ref, mg_ref, gain_ref, rowo_ref, w1_ref, w2_ref,
+            *, n: int, cap: int, window_steps: int):
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        gain_ref[...] = jnp.full_like(gain_ref, NEG)
+        rowo_ref[...] = jnp.full_like(rowo_ref, BIG)
+        w1_ref[...] = jnp.zeros_like(w1_ref)
+        w2_ref[...] = jnp.zeros_like(w2_ref)
+
+    r = row_ref[0]
+    c = col_ref[0]
+    w1 = val_ref[0]
+    colf = colf_ref[0]
+    valf = valf_ref[0]
+    ptr = ptr_ref[0]
+    mg = mg_ref[0, 0]
+
+    # ---- Step A: windowed completion lookup (m_j, m_i) in row m_j's segment
+    qr = jnp.take(mr_ref[0], jnp.clip(c, 0, n))
+    qc = jnp.take(mc_ref[0], jnp.clip(r, 0, n))
+    qr_s = jnp.clip(qr, 0, n)
+    lo = jnp.take(ptr, qr_s)
+    hi0 = jnp.where(qr < n, jnp.take(ptr, qr_s + 1), lo)
+    hi = hi0
+    for _ in range(window_steps):
+        mid = (lo + hi) // 2
+        k = jnp.take(colf, jnp.clip(mid, 0, cap - 1))
+        lt = k < qc
+        lo = jnp.where(lt, mid + 1, lo)
+        hi = jnp.where(lt, hi, mid)
+    found = (lo < hi0) & (jnp.take(colf, jnp.clip(lo, 0, cap - 1)) == qc)
+    w2 = jnp.where(found, jnp.take(valf, jnp.clip(lo, 0, cap - 1)), 0.0)
+
+    # ---- Step B: gain + candidate mask (same op order as the jnp reference)
+    gain = w1 + w2 - jnp.take(u_ref[0], jnp.clip(r, 0, n)) - jnp.take(
+        v_ref[0], jnp.clip(c, 0, n))
+    cand = found & (r < n) & (r > qr) & (gain > mg)
+
+    # ---- Step C: per-column winner accumulation (masked lanes -> slot n)
+    cj = jnp.where(cand, c, n)
+    g_cur = gain_ref[0]
+    g2 = g_cur.at[cj].max(jnp.where(cand, gain, NEG))
+    hit = cand & (gain == jnp.take(g2, cj))
+    rc = jnp.full_like(rowo_ref[0], BIG).at[cj].min(jnp.where(hit, r, BIG))
+    r_cur = rowo_ref[0]
+    # Columns this tile improves take the tile's min hitting row outright;
+    # gain ties resolve toward the smaller row (a tile can never tie both
+    # gain and row of the incumbent — (row, col) pairs are unique).
+    r2 = jnp.where(g2 > g_cur, rc, jnp.minimum(r_cur, rc))
+    sel = hit & (r == jnp.take(r2, cj))
+    cjs = jnp.where(sel, cj, n)
+    w1_2 = w1_ref[0].at[cjs].set(jnp.where(sel, w1, 0.0))
+    w2_2 = w2_ref[0].at[cjs].set(jnp.where(sel, w2, 0.0))
+    gain_ref[0] = g2
+    rowo_ref[0] = r2
+    w1_ref[0] = w1_2
+    w2_ref[0] = w2_2
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "te", "window_steps", "interpret")
+)
+def awac_sweep(row, col, val, row_ptr, mate_row, mate_col, u, v, min_gain, *,
+               n: int, te: int, window_steps: int, interpret: bool):
+    """row/col/val: [cap] padded lex-sorted COO (cap % te == 0, padding rows
+    == n); row_ptr: [n + 2]; mate/u/v: [n + 1]; min_gain: f32 scalar.
+
+    Returns per-column winners over slots [n + 1 padded to lanes]:
+    (Cgain f32 (-inf if none), Crow i32 (INT32_MAX if none), Cw1, Cw2).
+    Callers slice [:n] and map the sentinels (see ops.awac_sweep_winners).
+    """
+    cap = row.shape[0]
+    assert cap % te == 0 and te % 128 == 0, (cap, te)
+    np_ = pl.cdiv(n + 1, 128) * 128
+    nv = pl.cdiv(n + 2, 128) * 128
+    grid = (cap // te,)
+
+    def lane_pad(x, width, fill):
+        return jnp.full((1, width), fill, x.dtype).at[0, : x.shape[0]].set(x)
+
+    tiled = pl.BlockSpec((1, te), lambda t: (0, t))
+    full = lambda width: pl.BlockSpec((1, width), lambda t: (0, 0))
+    out_spec = pl.BlockSpec((1, np_), lambda t: (0, 0))
+    out = pl.pallas_call(
+        functools.partial(_kernel, n=n, cap=cap, window_steps=window_steps),
+        grid=grid,
+        in_specs=[
+            tiled, tiled, tiled,                  # row, col, val (streamed)
+            full(cap), full(cap),                 # full col, val (resident)
+            full(nv),                             # row_ptr
+            full(nv), full(nv),                   # mate_row, mate_col
+            full(nv), full(nv),                   # u, v
+            pl.BlockSpec((1, 1), lambda t: (0, 0)),  # min_gain
+        ],
+        out_specs=[out_spec] * 4,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, np_), jnp.float32),
+            jax.ShapeDtypeStruct((1, np_), jnp.int32),
+            jax.ShapeDtypeStruct((1, np_), jnp.float32),
+            jax.ShapeDtypeStruct((1, np_), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        row.reshape(1, cap), col.reshape(1, cap), val.reshape(1, cap),
+        col.reshape(1, cap), val.reshape(1, cap),
+        lane_pad(row_ptr, nv, cap),
+        lane_pad(mate_row, nv, n), lane_pad(mate_col, nv, n),
+        lane_pad(u, nv, 0), lane_pad(v, nv, 0),
+        jnp.asarray(min_gain, jnp.float32).reshape(1, 1),
+    )
+    return out[0][0], out[1][0], out[2][0], out[3][0]

@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 NEG = float("-inf")
 
 
@@ -60,7 +62,7 @@ def _kernel(a_ref, a2_ref, u_ref, v_ref, gain_ref, row_ref, *, tm: int):
     jax.jit, static_argnames=("tm", "tn", "interpret")
 )
 def cycle_gain(a, a2, u, v, *, tm: int = 256, tn: int = 256,
-               interpret: bool = True):
+               interpret: bool | None = None):
     """a, a2: [M, N] f32 (0.0 = structurally absent); u: [M] f32; v: [N] f32.
     Returns (best_gain [N] f32, best_row [N] i32, -1 where no candidate).
 
@@ -86,6 +88,6 @@ def cycle_gain(a, a2, u, v, *, tm: int = 256, tn: int = 256,
             jax.ShapeDtypeStruct((1, n), jnp.float32),
             jax.ShapeDtypeStruct((1, n), jnp.int32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(a, a2, u[:, None], v[None, :])
     return out[0][0], out[1][0]

@@ -1,4 +1,5 @@
-"""jit'd public wrappers for the cycle_gain kernel (padding + dispatch)."""
+"""jit'd public wrappers for the cycle_gain kernel package (padding +
+dispatch): the dense tile kernel and the fused sparse AWAC sweep."""
 from __future__ import annotations
 
 import functools
@@ -6,6 +7,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_interpret
+from repro.kernels.cycle_gain.awac_sweep import awac_sweep
 from repro.kernels.cycle_gain.cycle_gain import cycle_gain
 from repro.kernels.cycle_gain.ref import cycle_gain_ref
 
@@ -18,10 +21,11 @@ def _round_up(x, m):
 
 @functools.partial(jax.jit, static_argnames=("tm", "tn", "use_kernel", "interpret"))
 def cycle_gain_padded(a, a2, u, v, *, tm: int = 256, tn: int = 256,
-                      use_kernel: bool = True, interpret: bool = True):
+                      use_kernel: bool = True, interpret: bool | None = None):
     """Pads (M, N) up to tile multiples and dispatches to the Pallas kernel
-    (or the jnp reference when ``use_kernel=False`` — used by XLA-only paths
-    and as the lowering default off-TPU)."""
+    (or the jnp reference when ``use_kernel=False`` — used by XLA-only
+    paths). ``interpret=None`` auto-detects: compiled on TPU, interpreter
+    elsewhere."""
     m, n = a.shape
     if not use_kernel:
         return cycle_gain_ref(a, a2, u, v)
@@ -32,12 +36,45 @@ def cycle_gain_padded(a, a2, u, v, *, tm: int = 256, tn: int = 256,
     a2_p = jnp.zeros((mp, np_), a2.dtype).at[:m, :n].set(a2)
     u_p = jnp.zeros((mp,), u.dtype).at[:m].set(u)
     v_p = jnp.zeros((np_,), v.dtype).at[:n].set(v)
-    g, r = cycle_gain(a_p, a2_p, u_p, v_p, tm=tm, tn=tn, interpret=interpret)
+    g, r = cycle_gain(a_p, a2_p, u_p, v_p, tm=tm, tn=tn,
+                      interpret=resolve_interpret(interpret))
     return g[:n], r[:n]
 
 
+@functools.partial(
+    jax.jit, static_argnames=("n", "te", "window_steps", "interpret")
+)
+def awac_sweep_winners(row, col, val, row_ptr, mate_row, mate_col, u, v,
+                       min_gain, *, n: int, window_steps: int, te: int = 512,
+                       interpret: bool | None = None):
+    """Fused Steps A+B+C via the ``awac_sweep`` Pallas kernel.
+
+    Same contract as ``repro.core.single.awac_cwinners``: returns
+    (Cgain [n], Ci [n] (sentinel n if no candidate), Cw1 [n], Cw2 [n]),
+    bit-identical to the jnp reference. Pads the edge list up to a tile
+    multiple with (n, n, 0) entries, which the kernel's ``row < n`` mask
+    drops.
+    """
+    cap = row.shape[0]
+    capp = max(_round_up(cap, te), te)
+    if capp != cap:
+        pad = capp - cap
+        row = jnp.concatenate([row, jnp.full((pad,), n, row.dtype)])
+        col = jnp.concatenate([col, jnp.full((pad,), n, col.dtype)])
+        val = jnp.concatenate([val, jnp.zeros((pad,), val.dtype)])
+    Cgain, Crow, Cw1, Cw2 = awac_sweep(
+        row, col, val, row_ptr, mate_row, mate_col, u, v, min_gain,
+        n=n, te=te, window_steps=window_steps,
+        interpret=resolve_interpret(interpret),
+    )
+    Cgain, Crow, Cw1, Cw2 = Cgain[:n], Crow[:n], Cw1[:n], Cw2[:n]
+    has = Cgain > NEG
+    Ci = jnp.where(has, Crow, n).astype(jnp.int32)
+    return Cgain, Ci, jnp.where(has, Cw1, 0.0), jnp.where(has, Cw2, 0.0)
+
+
 def swap_gains(affinity, assign_expert, tok_affinity, *, use_kernel=True,
-               interpret=True):
+               interpret=None):
     """AWPM-router building block: gains of swapping token i's expert with the
     expert owning slot j.
 

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _kernel(idx_ref, w_ref, tbl_ref, o_ref, *, tv: int):
     iv = pl.program_id(1)
@@ -46,7 +48,7 @@ def _kernel(idx_ref, w_ref, tbl_ref, o_ref, *, tv: int):
 
 @functools.partial(jax.jit, static_argnames=("tb", "tv", "interpret"))
 def embedding_bag(idx, w, table, *, tb: int = 8, tv: int = 512,
-                  interpret: bool = True):
+                  interpret: bool | None = None):
     """idx [B, L] int32 (-1 = padding); w [B, L] f32; table [V, D] f32.
     Returns [B, D] f32 with out[b] = sum_l w[b,l] * table[idx[b,l]].
     B % tb == 0 and V % tv == 0 required (ops.py pads)."""
@@ -64,5 +66,5 @@ def embedding_bag(idx, w, table, *, tb: int = 8, tv: int = 512,
         ],
         out_specs=pl.BlockSpec((tb, d), lambda ib, iv: (ib, 0)),
         out_shape=jax.ShapeDtypeStruct((b, d), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(idx, w, table)

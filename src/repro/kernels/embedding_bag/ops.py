@@ -16,7 +16,7 @@ def _round_up(x, m):
 
 @functools.partial(jax.jit, static_argnames=("tb", "tv", "use_kernel", "interpret"))
 def embedding_bag_padded(idx, w, table, *, tb: int = 8, tv: int = 512,
-                         use_kernel: bool = True, interpret: bool = True):
+                         use_kernel: bool = True, interpret: bool | None = None):
     if not use_kernel:
         return embedding_bag_ref(idx, w, table)
     b, l = idx.shape

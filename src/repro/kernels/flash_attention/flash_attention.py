@@ -20,6 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.backend import resolve_interpret
 from jax.experimental.pallas import tpu as pltpu
 
 NEG = float("-inf")
@@ -69,7 +71,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
     jax.jit, static_argnames=("causal", "tq", "tk", "interpret")
 )
 def flash_attention(q, k, v, *, causal: bool = True, tq: int = 128,
-                    tk: int = 128, interpret: bool = True):
+                    tk: int = 128, interpret: bool | None = None):
     """q: [B, H, S, D]; k, v: [B, Hkv, S, D] with H % Hkv == 0.
     S must be a multiple of max(tq, tk). Returns [B, H, S, D] in q.dtype."""
     b, h, s, d = q.shape
@@ -96,6 +98,6 @@ def flash_attention(q, k, v, *, causal: bool = True, tq: int = 128,
             pltpu.VMEM((tq, 1), jnp.float32),
             pltpu.VMEM((tq, 1), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)
     return out

@@ -19,7 +19,7 @@ from repro.kernels.flash_attention.ref import attention_ref
 
 @functools.partial(jax.jit, static_argnames=("causal", "use_kernel", "interpret"))
 def attention(q, k, v, *, causal: bool = True, use_kernel: bool = False,
-              interpret: bool = True):
+              interpret: bool | None = None):
     """q [B, S, H, D]; k, v [B, Sk, Hkv, D] -> [B, S, H, D]."""
     qt = jnp.swapaxes(q, 1, 2)
     kt = jnp.swapaxes(k, 1, 2)

@@ -19,7 +19,7 @@ def _round_up(x, m):
 @functools.partial(jax.jit, static_argnames=("ti", "tj", "use_kernel",
                                              "interpret"))
 def router_swap_padded(affinity, assign, cur, *, ti: int = 256, tj: int = 256,
-                       use_kernel: bool = True, interpret: bool = True):
+                       use_kernel: bool = True, interpret: bool | None = None):
     if not use_kernel:
         return router_swap_ref(affinity, assign, cur)
     t, e = affinity.shape

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 NEG = float("-inf")
 
 
@@ -64,7 +66,7 @@ def _kernel(aff_i_ref, aff_j_ref, as_i_ref, as_j_ref, cur_i_ref, cur_j_ref,
 
 @functools.partial(jax.jit, static_argnames=("ti", "tj", "interpret"))
 def router_swap(affinity, assign, cur, *, ti: int = 256, tj: int = 256,
-                interpret: bool = True):
+                interpret: bool | None = None):
     """affinity [T, E] f32; assign [T] int32; cur [T] f32 (current affinity).
     Returns (best_gain [T], best_partner [T] int32, -1 if none).
     T % ti == 0, T % tj == 0 required (ops.py pads)."""
@@ -90,7 +92,7 @@ def router_swap(affinity, assign, cur, *, ti: int = 256, tj: int = 256,
             jax.ShapeDtypeStruct((1, t), jnp.float32),
             jax.ShapeDtypeStruct((1, t), jnp.int32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(affinity, affinity, assign[:, None], assign[:, None], cur[:, None],
       cur[None, :])
     return out[0][0], out[1][0]

@@ -41,6 +41,8 @@ def _compile_metrics(cell, mesh):
         compiled = lowered.compile()
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # jax 0.4.x: one dict per device
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     coll = collective_bytes(hlo)
     return compiled, ma, float(ca.get("flops", 0.0)), \
@@ -92,12 +94,17 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, router=None,
         rl = roofline_terms(flops, bytes_acc, coll["total"])
         shape = next(s for s in shapes_for(cfg) if s.name == shape_name)
         mf = useful_flops(arch, shape_name, cell.mode, cfg, shape)
+        # jaxlib < 0.5 has no peak stat; args + outputs + temps bounds it
+        peak = getattr(ma, "peak_memory_in_bytes", None)
+        if peak is None:
+            peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                    + ma.temp_size_in_bytes)
         rec.update(
             raw_uncorrected=raw,
             ok=True,
             mode=cell.mode,
             note=cell.note,
-            peak_memory_per_device=int(ma.peak_memory_in_bytes),
+            peak_memory_per_device=int(peak),
             argument_bytes=int(ma.argument_size_in_bytes),
             output_bytes=int(ma.output_size_in_bytes),
             temp_bytes=int(ma.temp_size_in_bytes),

@@ -12,8 +12,17 @@ from repro.sparse.ops import (
     coo_spmm,
     coo_sddmm,
     lex_searchsorted,
+    searchsorted_in_window,
+    x64_available,
 )
-from repro.sparse.csr import PaddedCSR, coo_to_padded_csr, sort_coo
+from repro.sparse.csr import (
+    PaddedCSR,
+    coo_to_padded_csr,
+    max_row_nnz,
+    row_ptr_from_sorted,
+    sort_coo,
+    window_depth,
+)
 from repro.sparse.partition import Partition2D, partition_coo_2d
 
 __all__ = [
@@ -23,9 +32,14 @@ __all__ = [
     "coo_spmm",
     "coo_sddmm",
     "lex_searchsorted",
+    "searchsorted_in_window",
+    "x64_available",
     "PaddedCSR",
     "coo_to_padded_csr",
+    "max_row_nnz",
+    "row_ptr_from_sorted",
     "sort_coo",
+    "window_depth",
     "Partition2D",
     "partition_coo_2d",
 ]

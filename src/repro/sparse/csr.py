@@ -1,8 +1,14 @@
-"""Padded CSR/COO construction (numpy side — runs in the data pipeline)."""
+"""Padded CSR/COO construction (numpy side — runs in the data pipeline),
+plus the device-side ``row_ptr`` builders used by the fused AWAC sweep engine
+(DESIGN.md §3) to turn the per-edge completion lookup into a windowed search."""
 from __future__ import annotations
 
 import dataclasses
+import functools
+import math
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -55,3 +61,36 @@ def coo_to_padded_csr(row, col, val, n_rows, n_cols, capacity=None) -> PaddedCSR
     col = np.concatenate([col, np.full(pad, n_cols, dtype=np.int32)])
     val = np.concatenate([val, np.zeros(pad, dtype=np.float32)])
     return PaddedCSR(n_rows, n_cols, nnz, row_ptr, row, col, val)
+
+
+# --------------------------------------------------------------------------
+# Device-side CSR windows over padded lex-sorted COO (fused AWAC sweep)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def row_ptr_from_sorted(row, n: int):
+    """One-time CSR ``row_ptr`` [n + 2] from a padded lex-sorted COO row
+    array (padding rows == n). ``row_ptr[i]`` is the first edge index with
+    ``row >= i``; ``row_ptr[n]`` is the start of the padding tail and
+    ``row_ptr[n + 1]`` the capacity. Built on device so the fused sweep can
+    run on graphs that never touch the host."""
+    targets = jnp.arange(n + 2, dtype=row.dtype)
+    return jnp.searchsorted(row, targets, side="left").astype(jnp.int32)
+
+
+def window_depth(max_row_nnz: int) -> int:
+    """Binary-search rounds needed to resolve a window of ``max_row_nnz``
+    entries (one extra round closes half-open intervals)."""
+    return max(1, math.ceil(math.log2(max(int(max_row_nnz), 1))) + 1)
+
+
+def max_row_nnz(row, n: int) -> int:
+    """Max nonzeros in any row of a *concrete* (host-available) padded COO
+    row array. Used to pick the static windowed-search depth; callers fall
+    back to a conservative depth when ``row`` is a tracer."""
+    r = np.asarray(row)
+    r = r[r < n]
+    if r.size == 0:
+        return 1
+    return int(np.bincount(r, minlength=1).max())

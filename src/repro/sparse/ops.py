@@ -4,6 +4,13 @@ All ops are shape-static and jit/vmap/shard_map friendly. Padding convention:
 invalid entries carry ``segment_id == num_segments`` (one past the end) and are
 dropped by passing ``num_segments + 1`` internally and slicing the tail off, or
 by masking values to the reduction identity.
+
+Packed-key fast path (fused AWAC sweep engine, DESIGN.md §3): when 64-bit
+types are available at trace time (``jax.experimental.enable_x64`` entered
+around the jitted call), the two-reduction argmax-with-tie-break ops below
+collapse into a single ``segment_max`` over a packed uint64 key
+``f32-key-bits ⧺ bitwise-not(payload)``, halving the number of O(m) scatter
+passes while staying bit-identical to the two-pass reference.
 """
 from __future__ import annotations
 
@@ -11,8 +18,53 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 NEG = -jnp.inf
+
+_SIGN32 = np.int32(np.uint32(0x80000000))
+
+
+def x64_available() -> bool:
+    """True when 64-bit dtypes survive canonicalization in the current trace
+    context (i.e. we are under ``jax.experimental.enable_x64``)."""
+    return jax.dtypes.canonicalize_dtype(np.uint64).itemsize == 8
+
+
+def _f32_sort_key(values):
+    """Monotone int32 key for float32 totally ordered like the floats
+    (-inf < ... < +inf; -0.0 and +0.0 compare in bit order — callers only
+    feed gains, never signed zeros that must tie)."""
+    bits = jax.lax.bitcast_convert_type(values, jnp.int32)
+    return jnp.where(bits < 0, ~bits, bits ^ _SIGN32)
+
+
+def _f32_from_sort_key(key):
+    bits = jnp.where(key < 0, key ^ _SIGN32, ~key)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _packed_segment_max(values, payload, segment_ids, num_segments):
+    """One-pass (max value, min payload) per segment via a packed uint64 key.
+
+    Requires an x64-enabled trace context. ``payload`` must be >= 0 int32.
+    Returns (seg_max f32, seg_payload i32) with (-inf, -1) for empty segments
+    and payload -1 wherever seg_max == -inf (matching the two-pass reference).
+    """
+    key_hi = _f32_sort_key(values)
+    # ~payload: smaller payload -> larger low word -> wins uint64 max on ties.
+    pair = jnp.stack([~payload, key_hi], axis=-1)  # little-endian: low first
+    key = jax.lax.bitcast_convert_type(pair, jnp.uint64)
+    out = jax.ops.segment_max(key, segment_ids, num_segments=num_segments)
+    pair_out = jax.lax.bitcast_convert_type(out, jnp.uint32).astype(jnp.int32)
+    k_hi = pair_out[..., 1]
+    seg_payload = ~pair_out[..., 0]
+    # uint64 identity (0) only decodes from the impossible (NaN key, payload
+    # -1) combination, so it identifies empty segments exactly.
+    empty = (k_hi == 0) & (pair_out[..., 0] == 0)
+    seg_max = jnp.where(empty, NEG, _f32_from_sort_key(k_hi))
+    seg_payload = jnp.where(empty | (seg_max == NEG), -1, seg_payload)
+    return seg_max, seg_payload
 
 
 def segment_max_with_payload(values, payload, segment_ids, num_segments):
@@ -24,7 +76,13 @@ def segment_max_with_payload(values, payload, segment_ids, num_segments):
 
     Returns (seg_max [num_segments], seg_payload [num_segments int32]).
     Segments with no entries get (-inf, -1).
+
+    Under an x64-enabled trace this is a single packed-key ``segment_max``
+    pass; otherwise the two-reduction reference below runs. Both produce
+    bit-identical results (see tests/test_fused_sweep.py).
     """
+    if x64_available():
+        return _packed_segment_max(values, payload, segment_ids, num_segments)
     seg_max = jax.ops.segment_max(
         values, segment_ids, num_segments=num_segments, indices_are_sorted=False
     )
@@ -45,14 +103,28 @@ def segment_argmax_tie(values, tie, segment_ids, num_segments):
 
     Used by the distributed AWAC Step C so that the distributed winner
     selection matches the single-device rule (max gain, tie -> smallest row)
-    even though edges arrive in a different order."""
+    even though edges arrive in a different order.
+
+    Under an x64-enabled trace the (max, tie) reduction is one packed-key
+    pass + one index-recovery pass instead of three segment reductions."""
+    big = jnp.iinfo(jnp.int32).max
+    idx = jnp.arange(values.shape[0], dtype=jnp.int32)
+    if x64_available():
+        seg_max, seg_tie = _packed_segment_max(
+            values, tie, segment_ids, num_segments
+        )
+        hit2 = (values == seg_max[jnp.clip(segment_ids, 0, num_segments - 1)]) & (
+            tie == seg_tie[jnp.clip(segment_ids, 0, num_segments - 1)]
+        )
+        idx_m = jnp.where(hit2, idx, big)
+        seg_idx = jax.ops.segment_min(idx_m, segment_ids, num_segments=num_segments)
+        seg_idx = jnp.where((seg_max == NEG) | (seg_idx == big), -1, seg_idx)
+        return seg_max, seg_idx
     seg_max = jax.ops.segment_max(values, segment_ids, num_segments=num_segments)
     hit = values == seg_max[jnp.clip(segment_ids, 0, num_segments - 1)]
-    big = jnp.iinfo(jnp.int32).max
     tie_m = jnp.where(hit, tie, big)
     seg_tie = jax.ops.segment_min(tie_m, segment_ids, num_segments=num_segments)
     hit2 = hit & (tie == seg_tie[jnp.clip(segment_ids, 0, num_segments - 1)])
-    idx = jnp.arange(values.shape[0], dtype=jnp.int32)
     idx_m = jnp.where(hit2, idx, big)
     seg_idx = jax.ops.segment_min(idx_m, segment_ids, num_segments=num_segments)
     seg_idx = jnp.where((seg_max == NEG) | (seg_idx == big), -1, seg_idx)
@@ -123,4 +195,31 @@ def lex_searchsorted(keys_r, keys_c, q_r, q_c, n_steps: int = 32):
     pos = lo
     pos_c = jnp.clip(pos, 0, m - 1)
     found = (pos < m) & (keys_r[pos_c] == q_r) & (keys_c[pos_c] == q_c)
+    return pos, found
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps",))
+def searchsorted_in_window(keys, q, lo, hi, n_steps: int):
+    """Per-query binary search for ``q`` inside the sorted window
+    ``keys[lo:hi)`` (CSR-windowed completion lookup, DESIGN.md §3).
+
+    ``n_steps`` must cover the widest window (ceil(log2(max_width)) + 1);
+    with CSR row windows that is the max row degree — log2(nnz/n)-ish rounds
+    instead of the log2(m) a global lex search needs. Returns (pos, found).
+    """
+    m = keys.shape[0]
+    hi0 = hi
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = (lo + hi) // 2
+        k = keys[jnp.clip(mid, 0, m - 1)]
+        lt = k < q
+        lo = jnp.where(lt, mid + 1, lo)
+        hi = jnp.where(lt, hi, mid)
+        return lo, hi
+
+    lo, _ = jax.lax.fori_loop(0, n_steps, body, (lo, hi0))
+    pos = lo
+    found = (pos < hi0) & (keys[jnp.clip(pos, 0, m - 1)] == q)
     return pos, found

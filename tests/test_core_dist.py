@@ -8,11 +8,14 @@ from _subproc import run_with_devices
 
 DIST_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.core import graph, ref, single
 from repro.core.dist import GridSpec, DistAWPM, default_caps
 
-mesh = jax.make_mesh({mesh_shape}, {mesh_axes}, axis_types=(AxisType.Auto,)*{nax})
+try:  # jax >= 0.6: explicit Auto axis types
+    from jax.sharding import AxisType
+    mesh = jax.make_mesh({mesh_shape}, {mesh_axes}, axis_types=(AxisType.Auto,)*{nax})
+except ImportError:  # jax 0.4.x: all axes are Auto already
+    mesh = jax.make_mesh({mesh_shape}, {mesh_axes})
 spec = GridSpec(mesh, {row_axes}, "model")
 for seed in range(3):
     g = graph.generate(64, avg_degree=6.0, kind="{kind}", seed=seed)
@@ -52,11 +55,14 @@ def test_dist_awpm_multipod_matches_single():
 
 OVERFLOW_SCRIPT = r"""
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
 from repro.core import graph, ref, single
 from repro.core.dist import GridSpec, DistAWPM
 
-mesh = jax.make_mesh((4, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+try:
+    from jax.sharding import AxisType
+    mesh = jax.make_mesh((4, 4), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+except ImportError:
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
 spec = GridSpec(mesh, ("data",), "model")
 g = graph.generate(64, avg_degree=8.0, kind="uniform", seed=5)
 struct = g.structure_dense()

@@ -9,9 +9,14 @@ from repro.models.layers import rope, softmax_xent
 
 def _ref_real_sph_harm(theta, phi, l, m):
     """Reference real spherical harmonics from scipy's complex Y_lm."""
-    from scipy.special import sph_harm_y
+    try:  # scipy >= 1.15: sph_harm_y(l, m, polar, azimuth)
+        from scipy.special import sph_harm_y
+    except ImportError:  # older scipy: sph_harm(m, l, azimuth, polar)
+        from scipy.special import sph_harm
 
-    # scipy: sph_harm_y(l, m, polar, azimuth)
+        def sph_harm_y(l, m, polar, azimuth):
+            return sph_harm(m, l, azimuth, polar)
+
     y = sph_harm_y(l, abs(m), theta, phi)
     if m == 0:
         return y.real

@@ -1,7 +1,10 @@
 """Hypothesis property tests on the matching system's invariants."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import graph, ref, single
 from repro.sparse.ops import lex_searchsorted
