@@ -1,9 +1,10 @@
 """repro.core — the paper's contribution: distributed-memory approximate-weight
 perfect bipartite matching (AWPM = greedy maximal -> MCM -> AWAC 4-cycles)."""
-from repro.core import graph, pivot, ref, single
+from repro.core import batch, graph, pivot, ref, single
 from repro.core.graph import BipartiteGraph, from_coo, generate, matrix_suite
 
 __all__ = [
+    "batch",
     "graph",
     "pivot",
     "ref",

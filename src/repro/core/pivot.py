@@ -82,3 +82,53 @@ def static_pivot_solve(a: np.ndarray, b: np.ndarray, mate_row: np.ndarray):
 
 def relative_error(x: np.ndarray, x_true: np.ndarray) -> float:
     return float(np.max(np.abs(x - x_true)) / max(np.max(np.abs(x)), 1e-300))
+
+
+# --------------------------------------------------------------------------
+# Multi-matrix batched pivoting (one matching dispatch for a whole batch)
+# --------------------------------------------------------------------------
+
+
+def batched_pivot_permutations(mats, metric: str = "product",
+                               backend: str = "auto"):
+    """AWPM row permutations for a batch of same-size matrices via ONE
+    batched matching call (core.batch.awpm_batched) — the pivot-serving
+    path: SuperLU/PARDISO-style preprocessing pipelines hold many matrices,
+    and the matching engine is the shared front-end.
+
+    metric: "product" (log-weights, MC64 option-5 analogue, Table 6.3) or
+    "sum" (raw |a_ij|). Each matrix is equilibrated first, as in §6.6.
+    Returns (perms [B, n] int64, awac_iters [B])."""
+    if metric not in ("product", "sum"):
+        raise ValueError(f"unknown pivot metric {metric!r}")
+    from repro.core import batch
+    from repro.core.graph import from_coo
+
+    n = mats[0].shape[0]
+    gs = []
+    for a in mats:
+        if a.shape != (n, n):
+            raise ValueError("all matrices in a batch must share n")
+        a_s, _, _ = equilibrate(np.asarray(a))
+        rr, cc = np.nonzero(a_s)
+        g = from_coo(rr.astype(np.int32), cc.astype(np.int32),
+                     np.abs(a_s[rr, cc]).astype(np.float32), n)
+        gs.append(log_transformed(g) if metric == "product" else g)
+    row, col, val = batch.stack_graphs(gs)
+    st, iters = batch.awpm_batched(row, col, val, n, backend=backend)
+    mrs = np.array(st.mate_row[:, :n])
+    perms = np.stack([row_permutation(mr, n) for mr in mrs])
+    return perms, np.array(iters)
+
+
+def static_pivot_solve_batched(mats, bs, metric: str = "product",
+                               backend: str = "auto"):
+    """Full §6.6 pipeline for B systems: one batched AWPM call computes all
+    row permutations, then each system is equilibrated/permuted/factorized
+    (the LU itself stays per-matrix numpy — the matching is the batched hot
+    path). Returns (xs [B, n], awac_iters [B])."""
+    perms, iters = batched_pivot_permutations(mats, metric=metric,
+                                              backend=backend)
+    xs = [static_pivot_solve(a, b, perm)
+          for a, b, perm in zip(mats, bs, perms)]
+    return np.stack(xs), iters

@@ -87,30 +87,38 @@ def is_perfect(state: MatchState, n: int) -> jnp.ndarray:
 # --------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("n",))
-def greedy_maximal(row, col, val, n: int) -> MatchState:
+def greedy_round(row, col, val, n: int, mate_row, mate_col):
+    """One proposal round of the greedy weighted maximal matching. The
+    batched engine (core/batch.py) re-expresses this body on flat
+    offset-segment primitives — any change here must be mirrored in
+    ``batch._greedy_maximal_batched`` to keep per-instance bit-exactness.
+    Returns (mate_row, mate_col, progressed)."""
     cap = row.shape[0]
     eidx = jnp.arange(cap, dtype=jnp.int32)
     jvec = jnp.arange(n, dtype=jnp.int32)
     ivec = jnp.arange(n, dtype=jnp.int32)
+    avail = (row < n) & (mate_col[row] == n) & (mate_row[col] == n)
+    score = jnp.where(avail, val, NEG)
+    seg = jnp.where(avail, col, n)
+    pg, pe = segment_max_with_payload(score, eidx, seg, n + 1)
+    has = pe[:n] >= 0
+    prow = jnp.where(has, row[jnp.clip(pe[:n], 0)], n)
+    pv = jnp.where(has, pg[:n], NEG)
+    _, rj = segment_max_with_payload(pv, jvec, prow, n + 1)
+    ok = rj[:n] >= 0  # per-row winning proposal col
+    wcol = jnp.where(ok, rj[:n], n).astype(jnp.int32)
+    mate_col = mate_col.at[jnp.where(ok, ivec, n)].set(wcol)
+    mate_row = mate_row.at[wcol].set(jnp.where(ok, ivec, n).astype(jnp.int32))
+    mate_col = mate_col.at[n].set(n)
+    mate_row = mate_row.at[n].set(n)
+    return mate_row, mate_col, ok.any()
 
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def greedy_maximal(row, col, val, n: int) -> MatchState:
     def round_body(carry):
         mate_row, mate_col, _ = carry
-        avail = (row < n) & (mate_col[row] == n) & (mate_row[col] == n)
-        score = jnp.where(avail, val, NEG)
-        seg = jnp.where(avail, col, n)
-        pg, pe = segment_max_with_payload(score, eidx, seg, n + 1)
-        has = pe[:n] >= 0
-        prow = jnp.where(has, row[jnp.clip(pe[:n], 0)], n)
-        pv = jnp.where(has, pg[:n], NEG)
-        _, rj = segment_max_with_payload(pv, jvec, prow, n + 1)
-        ok = rj[:n] >= 0  # per-row winning proposal col
-        wcol = jnp.where(ok, rj[:n], n).astype(jnp.int32)
-        mate_col = mate_col.at[jnp.where(ok, ivec, n)].set(wcol)
-        mate_row = mate_row.at[wcol].set(jnp.where(ok, ivec, n).astype(jnp.int32))
-        mate_col = mate_col.at[n].set(n)
-        mate_row = mate_row.at[n].set(n)
-        return mate_row, mate_col, ok.any()
+        return greedy_round(row, col, val, n, mate_row, mate_col)
 
     def cond(carry):
         return carry[2]
@@ -176,53 +184,67 @@ def trace_and_flip(parent_col, visited, found, layers, mate_row, mate_col, n):
     return mate_row, mate_col
 
 
+def _mcm_bfs(row, col, val, n: int, mate_row, mate_col):
+    """One layered BFS from all free rows with weight-aware parent selection.
+    Returns (parent_col, visited, found, layers)."""
+    cap = row.shape[0]
+    eidx = jnp.arange(cap, dtype=jnp.int32)
+    frontier = jnp.zeros((n + 1,), bool).at[:n].set(mate_row[:n] == n)
+    parent_col = jnp.full((n + 1,), n, jnp.int32)
+    visited = jnp.zeros((n + 1,), bool)
+
+    def bfs_body(carry):
+        frontier, parent_col, visited, found, layers, _ = carry
+        elig = (row < n) & frontier[col] & (~visited[row])
+        score = jnp.where(elig, val, NEG)
+        seg = jnp.where(elig, row, n)
+        _, re = segment_max_with_payload(score, eidx, seg, n + 1)
+        new = re[:n] >= 0
+        pc = jnp.where(new, col[jnp.clip(re[:n], 0)], parent_col[:n])
+        parent_col = parent_col.at[:n].set(pc.astype(jnp.int32))
+        visited = visited.at[:n].set(visited[:n] | new)
+        free_new = new & (mate_col[:n] == n)
+        found = free_new.any()
+        nf_idx = jnp.where(new & ~free_new, mate_col[:n], n)
+        frontier = jnp.zeros((n + 1,), bool).at[nf_idx].set(True).at[n].set(False)
+        return frontier, parent_col, visited, found, layers + 1, new.any()
+
+    def bfs_cond(carry):
+        _, _, _, found, layers, progressed = carry
+        return (~found) & progressed & (layers <= n)
+
+    frontier, parent_col, visited, found, layers, _ = jax.lax.while_loop(
+        bfs_cond,
+        bfs_body,
+        (frontier, parent_col, visited, jnp.array(False), jnp.array(0, jnp.int32),
+         jnp.array(True)),
+    )
+    return parent_col, visited, found, layers
+
+
+def mcm_phase(row, col, val, n: int, mate_row, mate_col):
+    """One MCM phase: layered BFS + trace/flip of the augmenting paths it
+    found. The batched engine re-expresses this phase on flat
+    offset-segment primitives (``batch._mcm_bfs_batched`` /
+    ``batch.trace_and_flip_batched``) — changes here must be mirrored there
+    to keep per-instance bit-exactness. Returns (mate_row, mate_col,
+    found)."""
+    parent_col, visited, found, layers = _mcm_bfs(row, col, val, n, mate_row,
+                                                 mate_col)
+    mate_row, mate_col = trace_and_flip(
+        parent_col, visited, found, layers, mate_row, mate_col, n
+    )
+    return mate_row, mate_col, found
+
+
 @functools.partial(jax.jit, static_argnames=("n",))
 def mcm(row, col, val, n: int, mate_row, mate_col) -> MatchState:
     """Maximum cardinality matching from an initial matching, with the paper's
     weight-aware tie-breaking (heaviest eligible edge chosen as BFS parent)."""
-    cap = row.shape[0]
-    eidx = jnp.arange(cap, dtype=jnp.int32)
-
-    def bfs(mate_row, mate_col):
-        frontier = jnp.zeros((n + 1,), bool).at[:n].set(mate_row[:n] == n)
-        parent_col = jnp.full((n + 1,), n, jnp.int32)
-        visited = jnp.zeros((n + 1,), bool)
-
-        def bfs_body(carry):
-            frontier, parent_col, visited, found, layers, _ = carry
-            elig = (row < n) & frontier[col] & (~visited[row])
-            score = jnp.where(elig, val, NEG)
-            seg = jnp.where(elig, row, n)
-            _, re = segment_max_with_payload(score, eidx, seg, n + 1)
-            new = re[:n] >= 0
-            pc = jnp.where(new, col[jnp.clip(re[:n], 0)], parent_col[:n])
-            parent_col = parent_col.at[:n].set(pc.astype(jnp.int32))
-            visited = visited.at[:n].set(visited[:n] | new)
-            free_new = new & (mate_col[:n] == n)
-            found = free_new.any()
-            nf_idx = jnp.where(new & ~free_new, mate_col[:n], n)
-            frontier = jnp.zeros((n + 1,), bool).at[nf_idx].set(True).at[n].set(False)
-            return frontier, parent_col, visited, found, layers + 1, new.any()
-
-        def bfs_cond(carry):
-            _, _, _, found, layers, progressed = carry
-            return (~found) & progressed & (layers <= n)
-
-        frontier, parent_col, visited, found, layers, _ = jax.lax.while_loop(
-            bfs_cond,
-            bfs_body,
-            (frontier, parent_col, visited, jnp.array(False), jnp.array(0, jnp.int32),
-             jnp.array(True)),
-        )
-        return parent_col, visited, found, layers
 
     def phase_body(carry):
         mate_row, mate_col, _ = carry
-        parent_col, visited, found, layers = bfs(mate_row, mate_col)
-        mate_row, mate_col = trace_and_flip(
-            parent_col, visited, found, layers, mate_row, mate_col, n
-        )
-        return mate_row, mate_col, found
+        return mcm_phase(row, col, val, n, mate_row, mate_col)
 
     def phase_cond(carry):
         mate_row, _, go = carry

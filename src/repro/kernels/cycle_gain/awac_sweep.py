@@ -33,7 +33,8 @@ BIG = jnp.iinfo(jnp.int32).max
 def _kernel(row_ref, col_ref, val_ref, colf_ref, valf_ref, ptr_ref, mr_ref,
             mc_ref, u_ref, v_ref, mg_ref, gain_ref, rowo_ref, w1_ref, w2_ref,
             *, n: int, cap: int, window_steps: int):
-    t = pl.program_id(0)
+    # grid = (B, tiles): axis 0 walks instances, axis 1 streams edge tiles
+    t = pl.program_id(1)
 
     @pl.when(t == 0)
     def _init():
@@ -97,50 +98,74 @@ def _kernel(row_ref, col_ref, val_ref, colf_ref, valf_ref, ptr_ref, mr_ref,
 )
 def awac_sweep(row, col, val, row_ptr, mate_row, mate_col, u, v, min_gain, *,
                n: int, te: int, window_steps: int, interpret: bool):
-    """row/col/val: [cap] padded lex-sorted COO (cap % te == 0, padding rows
-    == n); row_ptr: [n + 2]; mate/u/v: [n + 1]; min_gain: f32 scalar.
+    """Single-instance sweep: row/col/val [cap] padded lex-sorted COO
+    (cap % te == 0, padding rows == n); row_ptr [n + 2]; mate/u/v [n + 1];
+    min_gain f32 scalar. A B=1 slice of ``awac_sweep_batched`` (one grid,
+    one kernel body — nothing to keep in sync).
 
     Returns per-column winners over slots [n + 1 padded to lanes]:
     (Cgain f32 (-inf if none), Crow i32 (INT32_MAX if none), Cw1, Cw2).
     Callers slice [:n] and map the sentinels (see ops.awac_sweep_winners).
     """
-    cap = row.shape[0]
+    out = awac_sweep_batched(
+        row[None], col[None], val[None], row_ptr[None], mate_row[None],
+        mate_col[None], u[None], v[None], min_gain,
+        n=n, te=te, window_steps=window_steps, interpret=interpret,
+    )
+    return out[0][0], out[1][0], out[2][0], out[3][0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "te", "window_steps", "interpret")
+)
+def awac_sweep_batched(row, col, val, row_ptr, mate_row, mate_col, u, v,
+                       min_gain, *, n: int, te: int, window_steps: int,
+                       interpret: bool):
+    """Batch-grid sweep: all inputs carry a leading batch axis (row/col/val
+    [B, cap], row_ptr [B, n + 2], state [B, n + 1]) and the grid is
+    (B, cap // te) — batch as the leading (slow) axis, so each instance's
+    winner blocks stay VMEM-resident while its edge tiles stream through,
+    then write back once as the grid moves to the next instance.
+
+    Returns per-instance winner blocks (Cgain, Crow, Cw1, Cw2), each
+    [B, n + 1 padded to lanes]; callers slice [:, :n] and map sentinels.
+    """
+    b, cap = row.shape
     assert cap % te == 0 and te % 128 == 0, (cap, te)
     np_ = pl.cdiv(n + 1, 128) * 128
     nv = pl.cdiv(n + 2, 128) * 128
-    grid = (cap // te,)
+    grid = (b, cap // te)
 
     def lane_pad(x, width, fill):
-        return jnp.full((1, width), fill, x.dtype).at[0, : x.shape[0]].set(x)
+        return jnp.full((b, width), fill, x.dtype).at[:, : x.shape[1]].set(x)
 
-    tiled = pl.BlockSpec((1, te), lambda t: (0, t))
-    full = lambda width: pl.BlockSpec((1, width), lambda t: (0, 0))
-    out_spec = pl.BlockSpec((1, np_), lambda t: (0, 0))
+    tiled = pl.BlockSpec((1, te), lambda i, t: (i, t))
+    full = lambda width: pl.BlockSpec((1, width), lambda i, t: (i, 0))
+    out_spec = pl.BlockSpec((1, np_), lambda i, t: (i, 0))
     out = pl.pallas_call(
         functools.partial(_kernel, n=n, cap=cap, window_steps=window_steps),
         grid=grid,
         in_specs=[
             tiled, tiled, tiled,                  # row, col, val (streamed)
-            full(cap), full(cap),                 # full col, val (resident)
+            full(cap), full(cap),                 # instance col, val (resident)
             full(nv),                             # row_ptr
             full(nv), full(nv),                   # mate_row, mate_col
             full(nv), full(nv),                   # u, v
-            pl.BlockSpec((1, 1), lambda t: (0, 0)),  # min_gain
+            pl.BlockSpec((1, 1), lambda i, t: (0, 0)),  # min_gain (shared)
         ],
         out_specs=[out_spec] * 4,
         out_shape=[
-            jax.ShapeDtypeStruct((1, np_), jnp.float32),
-            jax.ShapeDtypeStruct((1, np_), jnp.int32),
-            jax.ShapeDtypeStruct((1, np_), jnp.float32),
-            jax.ShapeDtypeStruct((1, np_), jnp.float32),
+            jax.ShapeDtypeStruct((b, np_), jnp.float32),
+            jax.ShapeDtypeStruct((b, np_), jnp.int32),
+            jax.ShapeDtypeStruct((b, np_), jnp.float32),
+            jax.ShapeDtypeStruct((b, np_), jnp.float32),
         ],
         interpret=interpret,
     )(
-        row.reshape(1, cap), col.reshape(1, cap), val.reshape(1, cap),
-        col.reshape(1, cap), val.reshape(1, cap),
+        row, col, val, col, val,
         lane_pad(row_ptr, nv, cap),
         lane_pad(mate_row, nv, n), lane_pad(mate_col, nv, n),
         lane_pad(u, nv, 0), lane_pad(v, nv, 0),
         jnp.asarray(min_gain, jnp.float32).reshape(1, 1),
     )
-    return out[0][0], out[1][0], out[2][0], out[3][0]
+    return out

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.backend import resolve_interpret
-from repro.kernels.cycle_gain.awac_sweep import awac_sweep
+from repro.kernels.cycle_gain.awac_sweep import awac_sweep_batched
 from repro.kernels.cycle_gain.cycle_gain import cycle_gain
 from repro.kernels.cycle_gain.ref import cycle_gain_ref
 
@@ -51,23 +51,43 @@ def awac_sweep_winners(row, col, val, row_ptr, mate_row, mate_col, u, v,
 
     Same contract as ``repro.core.single.awac_cwinners``: returns
     (Cgain [n], Ci [n] (sentinel n if no candidate), Cw1 [n], Cw2 [n]),
-    bit-identical to the jnp reference. Pads the edge list up to a tile
-    multiple with (n, n, 0) entries, which the kernel's ``row < n`` mask
-    drops.
+    bit-identical to the jnp reference. A B=1 slice of
+    ``awac_sweep_winners_batched`` (one padding/sentinel path to maintain).
     """
-    cap = row.shape[0]
+    Cgain, Ci, Cw1, Cw2 = awac_sweep_winners_batched(
+        row[None], col[None], val[None], row_ptr[None], mate_row[None],
+        mate_col[None], u[None], v[None], min_gain,
+        n=n, window_steps=window_steps, te=te, interpret=interpret,
+    )
+    return Cgain[0], Ci[0], Cw1[0], Cw2[0]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "te", "window_steps", "interpret")
+)
+def awac_sweep_winners_batched(row, col, val, row_ptr, mate_row, mate_col, u,
+                               v, min_gain, *, n: int, window_steps: int,
+                               te: int = 512, interpret: bool | None = None):
+    """Batched fused Steps A+B+C via the batch-grid ``awac_sweep_batched``
+    kernel. All operands carry a leading batch axis; returns per-instance
+    (Cgain [B, n], Ci [B, n] (sentinel n if no candidate), Cw1, Cw2),
+    bit-identical to running ``awac_sweep_winners`` per instance."""
+    b, cap = row.shape
     capp = max(_round_up(cap, te), te)
     if capp != cap:
         pad = capp - cap
-        row = jnp.concatenate([row, jnp.full((pad,), n, row.dtype)])
-        col = jnp.concatenate([col, jnp.full((pad,), n, col.dtype)])
-        val = jnp.concatenate([val, jnp.zeros((pad,), val.dtype)])
-    Cgain, Crow, Cw1, Cw2 = awac_sweep(
+        row = jnp.concatenate(
+            [row, jnp.full((b, pad), n, row.dtype)], axis=1)
+        col = jnp.concatenate(
+            [col, jnp.full((b, pad), n, col.dtype)], axis=1)
+        val = jnp.concatenate([val, jnp.zeros((b, pad), val.dtype)], axis=1)
+    Cgain, Crow, Cw1, Cw2 = awac_sweep_batched(
         row, col, val, row_ptr, mate_row, mate_col, u, v, min_gain,
         n=n, te=te, window_steps=window_steps,
         interpret=resolve_interpret(interpret),
     )
-    Cgain, Crow, Cw1, Cw2 = Cgain[:n], Crow[:n], Cw1[:n], Cw2[:n]
+    Cgain, Crow, Cw1, Cw2 = (Cgain[:, :n], Crow[:, :n], Cw1[:, :n],
+                             Cw2[:, :n])
     has = Cgain > NEG
     Ci = jnp.where(has, Crow, n).astype(jnp.int32)
     return Cgain, Ci, jnp.where(has, Cw1, 0.0), jnp.where(has, Cw2, 0.0)

@@ -78,109 +78,143 @@ def topk_route(logits, k, capacity):
     return topi, slot, w.astype(logits.dtype), keep, aux
 
 
-def balanced_assign(aff, capacity, max_iters=None):
-    """Greedy balanced assignment (the 'maximal matching' phase): proposal
-    rounds with per-expert top-capacity acceptance, then a deterministic
-    round-robin cleanup so every token is assigned and every expert holds
-    exactly ``capacity`` tokens. aff [T, E] (-inf = forbidden)."""
-    t, e = aff.shape
+def balanced_assign_batched(aff, capacity, max_iters=None):
+    """Greedy balanced assignment (the 'maximal matching' phase) for a batch
+    of G independent groups in one while_loop with per-group convergence
+    masks: proposal rounds with per-expert top-capacity acceptance, then a
+    deterministic round-robin cleanup so every token is assigned and every
+    expert holds exactly ``capacity`` tokens. aff [G, T, E] (-inf =
+    forbidden). Returns assigned [G, T]."""
+    g, t, e = aff.shape
     assert t == e * capacity, (t, e, capacity)
     max_iters = max_iters or (e + 8)
-    tvec = jnp.arange(t, dtype=jnp.int32)
+    gidx = jnp.arange(g)[:, None]
 
     def body(carry):
-        assigned, cap, it = carry
+        assigned, cap, it, active = carry
         open_e = cap > 0
-        aff_m = jnp.where((assigned[:, None] >= 0) | ~open_e[None, :], NEG, aff)
-        best_v = aff_m.max(axis=1)
-        best_e = jnp.argmax(aff_m, axis=1)
+        aff_m = jnp.where(
+            (assigned[..., None] >= 0) | ~open_e[:, None, :], NEG, aff)
+        best_v = aff_m.max(axis=2)
+        best_e = jnp.argmax(aff_m, axis=2)
         has = best_v > NEG
         score_te = jnp.where(
-            has[None, :] & (best_e[None, :] == jnp.arange(e)[:, None]),
-            aff.T, NEG,
-        )  # [E, T]
-        vals, idxs = jax.lax.top_k(score_te, capacity)  # [E, C]
-        ok = (vals > NEG) & (jnp.arange(capacity)[None, :] < cap[:, None])
-        tok = jnp.where(ok, idxs, t).reshape(-1)
-        exp = jnp.where(ok, jnp.arange(e, dtype=jnp.int32)[:, None], 0).reshape(-1)
-        assigned = jnp.concatenate([assigned, jnp.array([-1], jnp.int32)])
-        assigned = assigned.at[tok].set(exp.astype(jnp.int32))[:t]
-        cap = cap - ok.sum(axis=1)
-        return assigned, cap, it + 1
+            has[:, None, :]
+            & (best_e[:, None, :] == jnp.arange(e)[None, :, None]),
+            jnp.swapaxes(aff, 1, 2), NEG,
+        )  # [G, E, T]
+        vals, idxs = jax.lax.top_k(score_te, capacity)  # [G, E, C]
+        ok = (vals > NEG) & (jnp.arange(capacity)[None, None, :]
+                             < cap[:, :, None])
+        ok = ok & active[:, None, None]  # frozen groups accept nothing
+        tok = jnp.where(ok, idxs, t).reshape(g, -1)
+        exp = jnp.where(ok, jnp.arange(e, dtype=jnp.int32)[None, :, None],
+                        0).reshape(g, -1)
+        assigned = jnp.concatenate(
+            [assigned, jnp.full((g, 1), -1, jnp.int32)], axis=1)
+        assigned = assigned.at[gidx, tok].set(exp.astype(jnp.int32))[:, :t]
+        cap = cap - ok.sum(axis=2)
+        return assigned, cap, it + 1, active & (assigned < 0).any(axis=1)
 
     def cond(carry):
-        assigned, _, it = carry
-        return (assigned < 0).any() & (it < max_iters)
+        _, _, it, active = carry
+        return active.any() & (it < max_iters)
 
-    assigned0 = jnp.full((t,), -1, jnp.int32)
-    cap0 = jnp.full((e,), capacity, jnp.int32)
-    assigned, cap, _ = jax.lax.while_loop(cond, body, (assigned0, cap0,
-                                                       jnp.array(0, jnp.int32)))
+    assigned0 = jnp.full((g, t), -1, jnp.int32)
+    cap0 = jnp.full((g, e), capacity, jnp.int32)
+    assigned, cap, _, _ = jax.lax.while_loop(
+        cond, body,
+        (assigned0, cap0, jnp.array(0, jnp.int32), jnp.ones((g,), bool)))
     # cleanup: r-th remaining token -> expert owning the r-th free slot
     rem = assigned < 0
-    rank = jnp.cumsum(rem.astype(jnp.int32)) - 1  # rank among remaining
-    free_cum = jnp.cumsum(cap)
-    slot_expert = jnp.searchsorted(free_cum, rank, side="right").astype(jnp.int32)
-    assigned = jnp.where(rem, slot_expert, assigned)
-    return assigned
+    rank = jnp.cumsum(rem.astype(jnp.int32), axis=1) - 1
+    free_cum = jnp.cumsum(cap, axis=1)
+    slot_expert = jax.vmap(
+        lambda fc, rk: jnp.searchsorted(fc, rk, side="right")
+    )(free_cum, rank).astype(jnp.int32)
+    return jnp.where(rem, slot_expert, assigned)
 
 
-def swap_improve(aff, assign, rounds: int, min_gain=1e-6):
-    """AWAC on the router: mutual-best positive-gain token swaps, applied as a
-    vertex-disjoint set per round. Preserves perfect balance exactly."""
-    t = aff.shape[0]
+def balanced_assign(aff, capacity, max_iters=None):
+    """Single-group wrapper over ``balanced_assign_batched``. aff [T, E]."""
+    return balanced_assign_batched(aff[None], capacity, max_iters)[0]
+
+
+def swap_improve_batched(aff, assign, rounds: int, min_gain=1e-6):
+    """AWAC on the router for G groups at once: mutual-best positive-gain
+    token swaps, applied as a vertex-disjoint set per round (the swap-gain
+    matrix is [G, T, T], block-diagonal — tokens never swap across groups).
+    Preserves perfect balance exactly. aff [G, T, E], assign [G, T]."""
+    g, t = assign.shape
     tvec = jnp.arange(t, dtype=jnp.int32)
+    gidx = jnp.arange(g)[:, None]
 
     def body(_, assign):
-        cur = jnp.take_along_axis(aff, assign[:, None], axis=1)[:, 0]
-        a = jnp.take(aff, assign, axis=1)  # [T, T]: aff[i, e_j]
-        w = a + a.T - cur[:, None] - cur[None, :]
-        same = assign[:, None] == assign[None, :]
+        cur = jnp.take_along_axis(aff, assign[..., None], axis=2)[..., 0]
+        a = jax.vmap(lambda af, asn: jnp.take(af, asn, axis=1))(aff, assign)
+        w = a + jnp.swapaxes(a, 1, 2) - cur[:, :, None] - cur[:, None, :]
+        same = assign[:, :, None] == assign[:, None, :]
         w = jnp.where(same, NEG, w)  # same-expert swap is a no-op
-        g = w.max(axis=0)
-        bp = jnp.argmax(w, axis=0).astype(jnp.int32)  # best partner per column
-        mutual = (jnp.take(bp, bp) == tvec) & (g > min_gain) & (tvec < bp)
+        gg = w.max(axis=1)
+        bp = jnp.argmax(w, axis=1).astype(jnp.int32)  # best partner per col
+        mutual = (jnp.take_along_axis(bp, bp, axis=1) == tvec) \
+            & (gg > min_gain) & (tvec < bp)
         swap_with = jnp.where(mutual, bp, tvec)
-        swap_with = jnp.concatenate([swap_with, jnp.array([t], jnp.int32)])
-        swap_with = swap_with.at[jnp.where(mutual, bp, t)].set(
+        swap_with = jnp.concatenate(
+            [swap_with, jnp.full((g, 1), t, jnp.int32)], axis=1)
+        swap_with = swap_with.at[gidx, jnp.where(mutual, bp, t)].set(
             jnp.where(mutual, tvec, t).astype(jnp.int32)
-        )[:t]
-        swap_with = jnp.where(swap_with == t, tvec, swap_with)
-        return jnp.take(assign, swap_with)
+        )[:, :t]
+        swap_with = jnp.where(swap_with == t, tvec[None, :], swap_with)
+        return jnp.take_along_axis(assign, swap_with, axis=1)
 
     return jax.lax.fori_loop(0, rounds, body, assign)
 
 
-def awpm_route(logits, k, capacity_per_round, swap_rounds):
-    """k rounds of balanced assignment + 4-cycle improvement; round r
-    penalizes experts already used by the token (soft constraint, finite
-    penalty: a duplicate expert wastes a slot but stays well-defined — like
-    the paper's dropped cycles, rare cases are tolerated rather than paying
-    for an exact resolution). Returns (expert [T,k], slot [T,k], weight
-    [T,k], keep(all True), aux(0))."""
-    t, e = logits.shape
+def swap_improve(aff, assign, rounds: int, min_gain=1e-6):
+    """Single-group wrapper over ``swap_improve_batched``."""
+    return swap_improve_batched(aff[None], assign[None], rounds, min_gain)[0]
+
+
+def awpm_route_batched(logits, k, capacity_per_round, swap_rounds):
+    """Batched AWPM routing (DESIGN.md §4): k rounds of balanced assignment
+    + 4-cycle improvement for all G groups in one dispatch; round r penalizes
+    experts already used by the token (soft constraint, finite penalty: a
+    duplicate expert wastes a slot but stays well-defined — like the paper's
+    dropped cycles, rare cases are tolerated rather than paying for an exact
+    resolution). logits [G, T, E]. Returns (expert [G,T,k], slot [G,T,k],
+    weight [G,T,k], keep(all True), aux(0))."""
+    g, t, e = logits.shape
     aff = logits.astype(jnp.float32)
-    used = jnp.zeros((t, e), bool)
+    used = jnp.zeros((g, t, e), bool)
     experts = []
     for _ in range(k):
         a_r = jnp.where(used, aff - 1e6, aff)
-        assign = balanced_assign(a_r, capacity_per_round)
-        assign = swap_improve(a_r, assign, swap_rounds)
+        assign = balanced_assign_batched(a_r, capacity_per_round)
+        assign = swap_improve_batched(a_r, assign, swap_rounds)
         used = used | jax.nn.one_hot(assign, e, dtype=bool)
         experts.append(assign)
-    topi = jnp.stack(experts, axis=1)  # [T, k]
+    topi = jnp.stack(experts, axis=2)  # [G, T, k]
     # slots: round r occupies [r*C, (r+1)*C); rank within (expert, round)
     slots = []
     for r in range(k):
         onehot = jax.nn.one_hot(experts[r], e, dtype=jnp.int32)
-        ranks = jnp.cumsum(onehot, axis=0) - onehot
-        srank = jnp.take_along_axis(ranks, experts[r][:, None], axis=1)[:, 0]
+        ranks = jnp.cumsum(onehot, axis=1) - onehot
+        srank = jnp.take_along_axis(ranks, experts[r][..., None],
+                                    axis=2)[..., 0]
         slots.append(srank + r * capacity_per_round)
-    slot = jnp.stack(slots, axis=1)
-    sel_aff = jnp.take_along_axis(aff, topi, axis=1)
+    slot = jnp.stack(slots, axis=2)
+    sel_aff = jnp.take_along_axis(aff, topi, axis=2)
     w = jax.nn.softmax(sel_aff, axis=-1).astype(logits.dtype)
-    keep = jnp.ones((t, k), bool)
+    keep = jnp.ones((g, t, k), bool)
     return topi, slot, w, keep, jnp.float32(0.0)
+
+
+def awpm_route(logits, k, capacity_per_round, swap_rounds):
+    """Single-group wrapper over ``awpm_route_batched``. logits [T, E]."""
+    topi, slot, w, keep, aux = awpm_route_batched(
+        logits[None], k, capacity_per_round, swap_rounds)
+    return topi[0], slot[0], w[0], keep[0], aux
 
 
 # --------------------------- dispatch + layer --------------------------------
@@ -236,17 +270,19 @@ def moe_apply(p, x, cfg, moe):
     if moe.router == "awpm":
         # Block-local AWPM routing (DESIGN.md §4): the swap-gain matrix is
         # [gb, gb] per group, never [T, T]; per-group balance => global.
+        # All groups route through ONE batched call — the per-group
+        # while_loops run jointly with per-group convergence masks instead
+        # of G vmapped dispatch lanes.
         tbp = -(-gb_sz // e) * e
         cap_round = tbp // e
         capacity = k * cap_round
 
-        def route_block(lg):
-            lgp = jnp.zeros((tbp, e), lg.dtype).at[:gb_sz].set(lg)
-            ti, sl, w, _, _ = awpm_route(lgp, k, cap_round,
-                                         moe.router_swap_rounds)
-            return ti[:gb_sz], sl[:gb_sz], w[:gb_sz]
-
-        topi, slot, w = jax.vmap(route_block)(logits_g)  # [G, gb, k]
+        lgp = jnp.zeros((n_g, tbp, e), logits_g.dtype) \
+            .at[:, :gb_sz].set(logits_g)
+        ti, sl, ww, _, _ = awpm_route_batched(lgp, k, cap_round,
+                                              moe.router_swap_rounds)
+        topi, slot, w = (ti[:, :gb_sz], sl[:, :gb_sz],
+                         ww[:, :gb_sz])  # [G, gb, k]
         keep = jnp.ones((n_g, gb_sz, k), bool)
         aux = jnp.float32(0.0)
     else:

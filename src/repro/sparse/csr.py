@@ -79,6 +79,18 @@ def row_ptr_from_sorted(row, n: int):
     return jnp.searchsorted(row, targets, side="left").astype(jnp.int32)
 
 
+@functools.partial(jax.jit, static_argnames=("n",))
+def batched_row_ptr_from_sorted(row, n: int):
+    """Per-instance CSR ``row_ptr`` [B, n + 2] from a batch of padded
+    lex-sorted COO row arrays [B, cap] (padding rows == n). Each instance
+    gets the same row_ptr ``row_ptr_from_sorted`` would build for it; the
+    batched AWAC engine hoists this out of its while_loop."""
+    targets = jnp.arange(n + 2, dtype=row.dtype)
+    return jax.vmap(
+        lambda r: jnp.searchsorted(r, targets, side="left").astype(jnp.int32)
+    )(row)
+
+
 def window_depth(max_row_nnz: int) -> int:
     """Binary-search rounds needed to resolve a window of ``max_row_nnz``
     entries (one extra round closes half-open intervals)."""
@@ -87,9 +99,14 @@ def window_depth(max_row_nnz: int) -> int:
 
 def max_row_nnz(row, n: int) -> int:
     """Max nonzeros in any row of a *concrete* (host-available) padded COO
-    row array. Used to pick the static windowed-search depth; callers fall
-    back to a conservative depth when ``row`` is a tracer."""
+    row array — [cap], or [B, cap] for a batch, in which case the max is
+    taken across all instances (each instance's rows are counted separately
+    via a per-instance offset). Used to pick the static windowed-search
+    depth; callers fall back to a conservative depth when ``row`` is a
+    tracer."""
     r = np.asarray(row)
+    if r.ndim == 2:
+        return max(max_row_nnz(ri, n) for ri in r)
     r = r[r < n]
     if r.size == 0:
         return 1

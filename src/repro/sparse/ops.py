@@ -131,6 +131,59 @@ def segment_argmax_tie(values, tie, segment_ids, num_segments):
     return seg_max, seg_idx
 
 
+def batched_segment_max_with_payload(values, payload, segment_ids, num_segments):
+    """Batched ``segment_max_with_payload``: values/payload/segment_ids are
+    [B, m], segments are per-instance (ids in [0, num_segments]), and the
+    reduction runs as ONE flat segment op over B * (num_segments + 1)
+    offset segments instead of B dispatches or a vmapped scatter.
+
+    Payloads stay *local* (per-instance edge indices), so the smallest-payload
+    tie-break picks the same winner as a per-instance call — the batched
+    engine (core/batch.py) relies on this for bit-exactness with core.single.
+    Returns (seg_max [B, num_segments], seg_payload [B, num_segments])."""
+    b, m = values.shape
+    stride = num_segments + 1  # room for the per-instance dump segment
+    offs = (jnp.arange(b, dtype=segment_ids.dtype) * stride)[:, None]
+    flat_seg = (segment_ids + offs).reshape(-1)
+    seg_max, seg_payload = segment_max_with_payload(
+        values.reshape(-1), payload.reshape(-1), flat_seg, b * stride
+    )
+    seg_max = seg_max.reshape(b, stride)[:, :num_segments]
+    seg_payload = seg_payload.reshape(b, stride)[:, :num_segments]
+    return seg_max, seg_payload
+
+
+def batched_segment_min(values, segment_ids, num_segments):
+    """Batched ``jax.ops.segment_min`` over per-instance segments, flattened
+    to one offset-segment reduction (same layout contract as
+    ``batched_segment_max_with_payload``). Returns [B, num_segments]."""
+    b, m = values.shape
+    stride = num_segments + 1
+    offs = (jnp.arange(b, dtype=segment_ids.dtype) * stride)[:, None]
+    out = jax.ops.segment_min(
+        values.reshape(-1), (segment_ids + offs).reshape(-1),
+        num_segments=b * stride,
+    )
+    return out.reshape(b, stride)[:, :num_segments]
+
+
+@functools.partial(jax.jit, static_argnames=("n_steps",))
+def batched_searchsorted_in_window(keys, q, lo, hi, n_steps: int):
+    """Batched ``searchsorted_in_window``: keys are [B, m]; q/lo/hi are
+    [B, k] (k queries per instance, windows in per-instance coordinates).
+    Flattens to one search over [B * m] keys by offsetting each instance's
+    windows by b * m — windows never cross instance boundaries, so every
+    probe reads the same key the per-instance search would. Returns
+    (pos [B, k] local, found [B, k])."""
+    b, m = keys.shape
+    offs = (jnp.arange(b, dtype=lo.dtype) * m)[:, None]
+    pos, found = searchsorted_in_window(
+        keys.reshape(-1), q.reshape(-1), (lo + offs).reshape(-1),
+        (hi + offs).reshape(-1), n_steps=n_steps,
+    )
+    return pos.reshape(q.shape) - offs, found.reshape(q.shape)
+
+
 def segment_argmax(values, segment_ids, num_segments):
     """Per-segment argmax (row index into ``values``); -1 for empty segments."""
     idx = jnp.arange(values.shape[0], dtype=jnp.int32)

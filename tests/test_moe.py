@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.models.moe import (
-    awpm_route, balanced_assign, swap_improve, topk_route,
+    awpm_route, awpm_route_batched, balanced_assign, balanced_assign_batched,
+    swap_improve, swap_improve_batched, topk_route,
 )
 
 
@@ -87,6 +88,30 @@ def test_awpm_route_distinct_experts_and_unique_slots():
                     np.array(slot).reshape(-1).tolist()))
     assert len(pairs) == t * k
     np.testing.assert_allclose(np.array(w.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_batched_router_matches_per_group_vmap():
+    """The one-dispatch batched router (used by moe_apply) must assign every
+    group exactly as the per-group routing would: the per-group masks only
+    freeze converged groups, never change an active group's rounds."""
+    g_n, t, e, k = 3, 32, 4, 2
+    cap = t // e
+    lg = jnp.stack([_logits(t, e, seed=s) for s in range(g_n)])
+    tiB, slB, wB, keepB, auxB = awpm_route_batched(lg, k, cap, swap_rounds=3)
+    tiV, slV, wV, _, _ = jax.vmap(
+        lambda l: awpm_route(l, k, cap, swap_rounds=3))(lg)
+    np.testing.assert_array_equal(np.array(tiB), np.array(tiV))
+    np.testing.assert_array_equal(np.array(slB), np.array(slV))
+    np.testing.assert_allclose(np.array(wB), np.array(wV), rtol=1e-6)
+    # building blocks agree with their single-group wrappers per group
+    aff = lg
+    aB = balanced_assign_batched(aff, cap)
+    sB = swap_improve_batched(aff, aB, rounds=4)
+    for i in range(g_n):
+        np.testing.assert_array_equal(
+            np.array(aB[i]), np.array(balanced_assign(aff[i], cap)))
+        np.testing.assert_array_equal(
+            np.array(sB[i]), np.array(swap_improve(aff[i], aB[i], rounds=4)))
 
 
 @pytest.mark.parametrize("router,groups", [("topk", 0), ("topk", 4),

@@ -6,19 +6,29 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import graph, ref, single
+from repro.core import batch, graph, ref, single
 from repro.sparse.ops import lex_searchsorted
 
 SET = dict(max_examples=25, deadline=None)
 
 
 @st.composite
-def planted_graph(draw):
-    n = draw(st.integers(8, 40))
+def planted_graph(draw, n=None):
+    if n is None:
+        n = draw(st.integers(8, 40))
     deg = draw(st.floats(2.0, 6.0))
     kind = draw(st.sampled_from(["uniform", "circuit", "antigreedy", "banded"]))
     seed = draw(st.integers(0, 10_000))
     return graph.generate(n, avg_degree=deg, kind=kind, seed=seed)
+
+
+@st.composite
+def planted_batch(draw):
+    """A batch of heterogeneous planted graphs (mixed kinds/degrees/seeds)
+    sharing n, stacked to a common padded capacity."""
+    n = draw(st.integers(8, 24))
+    b = draw(st.integers(2, 4))
+    return [draw(planted_graph(n=n)) for _ in range(b)]
 
 
 @given(planted_graph())
@@ -37,6 +47,29 @@ def test_awpm_perfect_valid_and_two_thirds_optimal(g):
     _, opt = ref.exact_mwpm(dense, struct)
     w = float(single.matching_weight(st_, g.n))
     assert w >= (2.0 / 3.0) * opt - 1e-4
+
+
+@given(planted_batch())
+@settings(max_examples=15, deadline=None)
+def test_awpm_batched_perfect_valid_and_two_thirds_optimal(gs):
+    """Every instance routed through the batched engine satisfies the same
+    invariants the sequential engine guarantees: a valid perfect matching
+    that admits no augmenting 4-cycle and is >= 2/3-optimal."""
+    n = gs[0].n
+    row, col, val = batch.stack_graphs(gs)
+    stB, _ = batch.awpm_batched(row, col, val, n)
+    assert bool(batch.is_perfect_batched(stB, n).all())
+    weights = np.array(batch.matching_weight_batched(stB, n))
+    for i, g in enumerate(gs):
+        dense = g.to_dense().astype(np.float32)
+        struct = g.structure_dense()
+        mr = np.array(stB.mate_row[i, :n])
+        mc = np.array(stB.mate_col[i, :n])
+        ref.check_matching(struct, mr)
+        assert ref.is_perfect(mr, n)
+        assert ref.find_augmenting_4cycle(dense, struct, mr, mc) is None
+        _, opt = ref.exact_mwpm(dense, struct)
+        assert weights[i] >= (2.0 / 3.0) * opt - 1e-4
 
 
 @given(planted_graph())
