@@ -7,12 +7,95 @@ Real-TPU wall times are unavailable (CPU container); reported here:
       (alpha-beta costs of the 4 AWAC steps on a sqrt(p) x sqrt(p) grid),
       reproducing the shape of Fig 6.3,
   (c) measured AWAC per-round cost decomposition (requests, join, select).
+  (d) measured distributed-BATCHED throughput (DESIGN.md §5): one
+      ``awpm_dist_batched`` dispatch for B instances on a simulated p-device
+      2D grid, p in {1, 2, 4, 8} x B in {1, 8, 32}. Each p runs in a
+      subprocess because the fake device count must be set before jax
+      initializes (same constraint as tests/test_core_dist.py).
 """
+import os
+import pathlib
+import re
+import subprocess
+import sys
+
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core import graph, single
 from benchmarks._util import row, time_call
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+# p -> 2D mesh shape (both orientations are CI-tested; the bench uses one)
+DIST_MESHES = {1: (1, 1), 2: (1, 2), 4: (2, 2), 8: (2, 4)}
+
+DIST_CHILD = r"""
+import time
+import numpy as np, jax, jax.numpy as jnp
+from jax.experimental import enable_x64
+from repro.core import batch, graph
+from repro.core.dist import (DistBatchedAWPM, GridSpec,
+                             make_awpm_dist_batched, safe_a2a_caps)
+
+p, pr, pc, n, deg = {p}, {pr}, {pc}, {n}, {deg}
+mesh = jax.sharding.Mesh(
+    np.array(jax.devices()[:p]).reshape(pr, pc), ("data", "model"))
+spec = GridSpec(mesh)
+# 1x1 grid routes Steps A+B+C through core.batch's fused sweep directly
+backend = "xla" if p == 1 else "fused"
+for b in (1, 8, 32):
+    gs = [graph.generate(n, avg_degree=deg, kind="uniform", seed=s)
+          for s in range(b)]
+    row, col, val = (np.array(x) for x in batch.stack_graphs(gs))
+    drv = DistBatchedAWPM(spec, n, backend=backend)
+    part, brow, bcol, bval, ws = drv.partition(row, col, val)
+    caps = safe_a2a_caps(part.cap, pr, pc)
+    fn = make_awpm_dist_batched(spec, n, part.b, part.cap, caps,
+                                backend=backend, window_steps=ws)
+    with enable_x64():
+        st, iters, dropped = fn(brow, bcol, bval)  # compile + warmup
+        jax.block_until_ready(st)
+        reps = 3
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn(brow, bcol, bval)
+            jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / reps
+    stB, itB = batch.awpm_batched(jnp.asarray(row), jnp.asarray(col),
+                                  jnp.asarray(val), n)
+    ident = bool(np.array_equal(np.array(stB.mate_row),
+                                np.array(st.mate_row)))
+    print(f"ROW,awpm_dist_batched_p{{p}}_B{{b}},{{dt / b * 1e6:.1f}},"
+          f"matchings_per_s={{b / dt:.1f}};mesh={{pr}}x{{pc}};"
+          f"backend={{backend}};dropped={{int(dropped)}};"
+          f"identical_to_batched={{ident}}", flush=True)
+"""
+
+
+def run_dist_batched(n: int = 24, deg: float = 6.0):
+    """Distributed-batched matchings/sec rows via one subprocess per p."""
+    for p, (pr, pc) in DIST_MESHES.items():
+        env = dict(os.environ)
+        # strip any inherited device-count token entirely — XLA aborts on
+        # unknown flags, so the stale token can't just be renamed
+        inherited = re.sub(r"--xla_force_host_platform_device_count=\S+", "",
+                           env.get("XLA_FLAGS", ""))
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={p} {inherited}").strip()
+        env["PYTHONPATH"] = f"{REPO / 'src'}:{env.get('PYTHONPATH', '')}"
+        script = DIST_CHILD.format(p=p, pr=pr, pc=pc, n=n, deg=deg)
+        proc = subprocess.run([sys.executable, "-c", script],
+                              capture_output=True, text=True, env=env,
+                              timeout=1800)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"dist bench subprocess p={p} failed\n{proc.stdout}\n"
+                f"{proc.stderr}")
+        for line in proc.stdout.splitlines():
+            if line.startswith("ROW,"):
+                _, name, us, derived = line.split(",", 3)
+                row(name, float(us), derived)
 
 ALPHA = 1e-6  # s per message (ICI latency)
 BETA = 1.0 / 50e9  # s per byte per link
@@ -42,6 +125,8 @@ def run(sizes=(256, 512, 1024, 2048), deg=8.0):
     for p in (1, 4, 16, 64, 256, 512):
         tp = analytic_awac_round(n, m, p)
         row(f"awac_model_p{p}", tp * 1e6, f"speedup={t1 / tp:.1f}x")
+    # measured distributed-batched throughput on simulated device grids
+    run_dist_batched()
     return True
 
 

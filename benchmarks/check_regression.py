@@ -1,0 +1,83 @@
+"""Benchmark regression gate (CI satellite): compare a freshly measured
+BENCH_kernels.json against the committed baseline.
+
+Two checks, per row name present in BOTH files:
+  1. bit-exactness flags (``weight_identical=…`` / ``weights_identical=…`` /
+     ``identical_to_batched=…`` in the derived field) must still be True —
+     a False here means an engine stopped agreeing with its oracle, which
+     is a correctness failure no matter how fast it got;
+  2. per-row throughput must not regress by more than ``--factor`` (default
+     2.5x; shared-runner wall clocks are noisy, so the gate only catches
+     step-function regressions, not percent-level drift).
+
+Rows that exist only on one side are reported but never fail the gate
+(benches grow new rows every PR). Exits 1 on any violation.
+
+Usage: python benchmarks/check_regression.py \
+           --baseline /tmp/baseline.json --fresh BENCH_kernels.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+IDENT_RE = re.compile(
+    r"(weights?_identical|identical_to_batched)=(True|False)")
+
+
+def _rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        rec = json.load(f)
+    return {r["name"]: r for r in rec.get("rows", [])}
+
+
+def _ident_flags(derived: str) -> list[tuple[str, bool]]:
+    return [(m.group(1), m.group(2) == "True")
+            for m in IDENT_RE.finditer(derived or "")]
+
+
+def check(baseline: dict[str, dict], fresh: dict[str, dict],
+          factor: float) -> list[str]:
+    failures = []
+    for name in sorted(set(baseline) & set(fresh)):
+        b, f = baseline[name], fresh[name]
+        for key, ok in _ident_flags(f.get("derived", "")):
+            if not ok:
+                failures.append(
+                    f"{name}: bit-exactness flag {key} is False "
+                    f"(derived={f['derived']!r})")
+        bu, fu = b.get("us_per_call"), f.get("us_per_call")
+        if bu and fu and fu > factor * bu:
+            failures.append(
+                f"{name}: {fu:.1f}us vs baseline {bu:.1f}us "
+                f"(> {factor}x regression)")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--factor", type=float, default=2.5)
+    args = ap.parse_args()
+    baseline, fresh = _rows(args.baseline), _rows(args.fresh)
+    only_b = sorted(set(baseline) - set(fresh))
+    only_f = sorted(set(fresh) - set(baseline))
+    if only_b:
+        print(f"# rows only in baseline (ignored): {only_b}")
+    if only_f:
+        print(f"# new rows (not gated yet): {only_f}")
+    failures = check(baseline, fresh, args.factor)
+    for msg in failures:
+        print(f"FAIL {msg}")
+    n = len(set(baseline) & set(fresh))
+    if failures:
+        sys.exit(1)
+    print(f"# regression gate OK: {n} shared rows within {args.factor}x, "
+          f"all bit-exactness flags True")
+
+
+if __name__ == "__main__":
+    main()

@@ -118,6 +118,68 @@ def _state_from_mates_windowed(row, col, val, row_ptr, n: int, mate_row,
 # --------------------------------------------------------------------------
 
 
+def greedy_propose_full(row, col, val, n: int, mate_row, mate_col):
+    """Per-column best available proposal from the full batched edge list:
+    (pv [B, n] score with NEG where none, prow [B, n] proposing row with
+    sentinel n). The distributed-batched engine (core/dist.py) computes the
+    same two arrays from 2D blocks + collectives and feeds them to the same
+    ``greedy_commit`` — that split is what keeps the two engines
+    bit-identical by construction."""
+    b, cap = row.shape
+    eidx = jnp.broadcast_to(jnp.arange(cap, dtype=jnp.int32), (b, cap))
+    avail = (row < n) & (jnp.take_along_axis(mate_col, row, axis=1) == n) \
+        & (jnp.take_along_axis(mate_row, col, axis=1) == n)
+    score = jnp.where(avail, val, NEG)
+    seg = jnp.where(avail, col, n)
+    pg, pe = batched_segment_max_with_payload(score, eidx, seg, n + 1)
+    has = pe[:, :n] >= 0
+    prow = jnp.where(
+        has, jnp.take_along_axis(row, jnp.clip(pe[:, :n], 0), axis=1), n)
+    pv = jnp.where(has, pg[:, :n], NEG)
+    return pv, prow
+
+
+def greedy_commit(pv, prow, n: int, mate_row, mate_col, active):
+    """Replicated per-row contest + mate scatter of one greedy proposal
+    round (shared verbatim with the distributed-batched engine). Frozen
+    instances accept nothing. Returns (mate_row, mate_col, active)."""
+    b = pv.shape[0]
+    jvec = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, n))
+    ivec = jnp.arange(n, dtype=jnp.int32)
+    bidx = jnp.arange(b)[:, None]
+    _, rj = batched_segment_max_with_payload(pv, jvec, prow, n + 1)
+    ok = (rj[:, :n] >= 0) & active[:, None]
+    wcol = jnp.where(ok, rj[:, :n], n).astype(jnp.int32)
+    mate_col = mate_col.at[bidx, jnp.where(ok, ivec[None, :], n)].set(wcol)
+    mate_row = mate_row.at[bidx, wcol].set(
+        jnp.where(ok, ivec[None, :], n).astype(jnp.int32))
+    mate_col = mate_col.at[:, n].set(n)
+    mate_row = mate_row.at[:, n].set(n)
+    return mate_row, mate_col, active & ok.any(axis=1)
+
+
+def greedy_loop(n: int, b: int, propose_fn):
+    """Greedy proposal rounds for B instances in one while_loop with
+    per-instance convergence masks. ``propose_fn(mate_row, mate_col) ->
+    (pv, prow)`` supplies each round's per-column proposals — the full edge
+    list here, blocks + collectives in the distributed engine. Returns
+    (mate_row, mate_col), each [B, n + 1]."""
+
+    def round_body(carry):
+        mate_row, mate_col, active = carry
+        pv, prow = propose_fn(mate_row, mate_col)
+        return greedy_commit(pv, prow, n, mate_row, mate_col, active)
+
+    def cond(carry):
+        return carry[2].any()
+
+    mr0, mc0 = empty_mates(b, n)
+    mate_row, mate_col, _ = jax.lax.while_loop(
+        cond, round_body, (mr0, mc0, jnp.ones((b,), bool))
+    )
+    return mate_row, mate_col
+
+
 def greedy_maximal_batched(row, col, val, n: int):
     """``single.greedy_maximal``'s proposal rounds for all instances in one
     while_loop: each round is ``single.greedy_round`` re-expressed on the
@@ -133,41 +195,9 @@ def greedy_maximal_batched(row, col, val, n: int):
 
 @functools.partial(jax.jit, static_argnames=("n",))
 def _greedy_maximal_batched(row, col, val, n: int):
-    b, cap = row.shape
-    eidx = jnp.broadcast_to(jnp.arange(cap, dtype=jnp.int32), (b, cap))
-    jvec = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, n))
-    ivec = jnp.arange(n, dtype=jnp.int32)
-    bidx = jnp.arange(b)[:, None]
-
-    def round_body(carry):
-        mate_row, mate_col, active = carry
-        avail = (row < n) & (jnp.take_along_axis(mate_col, row, axis=1) == n) \
-            & (jnp.take_along_axis(mate_row, col, axis=1) == n)
-        score = jnp.where(avail, val, NEG)
-        seg = jnp.where(avail, col, n)
-        pg, pe = batched_segment_max_with_payload(score, eidx, seg, n + 1)
-        has = pe[:, :n] >= 0
-        prow = jnp.where(
-            has, jnp.take_along_axis(row, jnp.clip(pe[:, :n], 0), axis=1), n)
-        pv = jnp.where(has, pg[:, :n], NEG)
-        _, rj = batched_segment_max_with_payload(pv, jvec, prow, n + 1)
-        ok = (rj[:, :n] >= 0) & active[:, None]
-        wcol = jnp.where(ok, rj[:, :n], n).astype(jnp.int32)
-        mate_col = mate_col.at[bidx, jnp.where(ok, ivec[None, :], n)].set(wcol)
-        mate_row = mate_row.at[bidx, wcol].set(
-            jnp.where(ok, ivec[None, :], n).astype(jnp.int32))
-        mate_col = mate_col.at[:, n].set(n)
-        mate_row = mate_row.at[:, n].set(n)
-        return mate_row, mate_col, active & ok.any(axis=1)
-
-    def cond(carry):
-        return carry[2].any()
-
-    mr0, mc0 = empty_mates(b, n)
-    mate_row, mate_col, _ = jax.lax.while_loop(
-        cond, round_body, (mr0, mc0, jnp.ones((b,), bool))
-    )
-    return mate_row, mate_col
+    b = row.shape[0]
+    return greedy_loop(
+        n, b, functools.partial(greedy_propose_full, row, col, val, n))
 
 
 # --------------------------------------------------------------------------
@@ -175,15 +205,48 @@ def _greedy_maximal_batched(row, col, val, n: int):
 # --------------------------------------------------------------------------
 
 
-def _mcm_bfs_batched(row, col, val, n: int, mate_row, mate_col):
-    """``single._mcm_bfs`` for all instances in one while_loop: per-instance
-    layer counts, found flags, and progress masks; layer bodies run on the
-    flat offset-segment reduction. An instance whose own BFS terminated
-    (found / stalled / layer bound) freezes while deeper searches continue.
-    Returns (parent_col, visited, found, layers), leading dim B."""
+def bfs_parents_full(row, col, val, n: int, frontier, visited):
+    """Per-row BFS parent proposals (new [B, n] mask, pcol [B, n] — valid
+    only where ``new``) from the full batched edge list. The distributed
+    engine computes the same arrays from 2D blocks + collectives and feeds
+    the same ``bfs_commit``."""
     b, cap = row.shape
     eidx = jnp.broadcast_to(jnp.arange(cap, dtype=jnp.int32), (b, cap))
+    elig = (row < n) & jnp.take_along_axis(frontier, col, axis=1) \
+        & (~jnp.take_along_axis(visited, row, axis=1))
+    score = jnp.where(elig, val, NEG)
+    seg = jnp.where(elig, row, n)
+    _, re = batched_segment_max_with_payload(score, eidx, seg, n + 1)
+    new = re[:, :n] >= 0
+    pcol = jnp.take_along_axis(col, jnp.clip(re[:, :n], 0), axis=1)
+    return new, pcol
+
+
+def bfs_commit(new, pcol, n: int, mate_col, parent_col, visited):
+    """One BFS layer's replicated state update (shared verbatim with the
+    distributed-batched engine). Returns (parent_col, visited, frontier,
+    found)."""
+    b = new.shape[0]
     bidx = jnp.arange(b)[:, None]
+    pc = jnp.where(new, pcol, parent_col[:, :n])
+    parent_col = parent_col.at[:, :n].set(pc.astype(jnp.int32))
+    visited = visited.at[:, :n].set(visited[:, :n] | new)
+    free_new = new & (mate_col[:, :n] == n)
+    found = free_new.any(axis=1)
+    nf_idx = jnp.where(new & ~free_new, mate_col[:, :n], n)
+    frontier = jnp.zeros((b, n + 1), bool).at[bidx, nf_idx].set(True) \
+        .at[:, n].set(False)
+    return parent_col, visited, frontier, found
+
+
+def mcm_bfs_loop(n: int, b: int, mate_row, mate_col, parents_fn):
+    """Layered BFS for all instances in one while_loop: per-instance layer
+    counts, found flags, and progress masks. ``parents_fn(frontier,
+    visited) -> (new, pcol)`` supplies each layer's per-row parent winners
+    (full edge list here; blocks + collectives in core.dist). An instance
+    whose own BFS terminated (found / stalled / layer bound) freezes while
+    deeper searches continue. Returns (parent_col, visited, found, layers),
+    leading dim B."""
     frontier0 = jnp.zeros((b, n + 1), bool).at[:, :n].set(
         mate_row[:, :n] == n)
     parent_col0 = jnp.full((b, n + 1), n, jnp.int32)
@@ -195,22 +258,9 @@ def _mcm_bfs_batched(row, col, val, n: int, mate_row, mate_col):
     def bfs_body(carry):
         frontier, parent_col, visited, found, layers, progressed = carry
         act = act_of(found, layers, progressed)
-        elig = (row < n) & jnp.take_along_axis(frontier, col, axis=1) \
-            & (~jnp.take_along_axis(visited, row, axis=1))
-        score = jnp.where(elig, val, NEG)
-        seg = jnp.where(elig, row, n)
-        _, re = batched_segment_max_with_payload(score, eidx, seg, n + 1)
-        new = re[:, :n] >= 0
-        pc = jnp.where(
-            new, jnp.take_along_axis(col, jnp.clip(re[:, :n], 0), axis=1),
-            parent_col[:, :n])
-        parent_col2 = parent_col.at[:, :n].set(pc.astype(jnp.int32))
-        visited2 = visited.at[:, :n].set(visited[:, :n] | new)
-        free_new = new & (mate_col[:, :n] == n)
-        found2 = free_new.any(axis=1)
-        nf_idx = jnp.where(new & ~free_new, mate_col[:, :n], n)
-        frontier2 = jnp.zeros((b, n + 1), bool).at[bidx, nf_idx].set(True) \
-            .at[:, n].set(False)
+        new, pcol = parents_fn(frontier, visited)
+        parent_col2, visited2, frontier2, found2 = bfs_commit(
+            new, pcol, n, mate_col, parent_col, visited)
         keep = act[:, None]
         return (jnp.where(keep, frontier2, frontier),
                 jnp.where(keep, parent_col2, parent_col),
@@ -229,6 +279,15 @@ def _mcm_bfs_batched(row, col, val, n: int, mate_row, mate_col):
          jnp.zeros((b,), jnp.int32), jnp.ones((b,), bool)),
     )
     return parent_col, visited, found, layers
+
+
+def _mcm_bfs_batched(row, col, val, n: int, mate_row, mate_col):
+    """``single._mcm_bfs`` for all instances in one while_loop (see
+    ``mcm_bfs_loop``)."""
+    b = row.shape[0]
+    return mcm_bfs_loop(
+        n, b, mate_row, mate_col,
+        functools.partial(bfs_parents_full, row, col, val, n))
 
 
 def trace_and_flip_batched(parent_col, visited, found, layers, mate_row,
@@ -296,13 +355,16 @@ def mcm_batched(row, col, val, n: int, mate_row, mate_col):
         return _mcm_batched(row, col, val, n, mate_row, mate_col)
 
 
-@functools.partial(jax.jit, static_argnames=("n",))
-def _mcm_batched(row, col, val, n: int, mate_row, mate_col):
+def mcm_loop(n: int, b: int, mate_row, mate_col, parents_fn):
+    """Masked MCM phase loop over the batched BFS + trace/flip bodies,
+    parameterized by the per-layer parent selection (``parents_fn``, see
+    ``mcm_bfs_loop``) so the distributed-batched engine shares every mask
+    and commit verbatim. Returns (mate_row, mate_col)."""
 
     def body(carry):
         mr, mc, active = carry
-        parent_col, visited, found, layers = _mcm_bfs_batched(
-            row, col, val, n, mr, mc)
+        parent_col, visited, found, layers = mcm_bfs_loop(
+            n, b, mr, mc, parents_fn)
         # frozen instances trace nothing: zero their layer counts + found
         found = found & active
         layers = jnp.where(active, layers, 0)
@@ -322,6 +384,13 @@ def _mcm_batched(row, col, val, n: int, mate_row, mate_col):
         cond, body, (mate_row, mate_col, active0)
     )
     return mate_row, mate_col
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def _mcm_batched(row, col, val, n: int, mate_row, mate_col):
+    b = row.shape[0]
+    return mcm_loop(n, b, mate_row, mate_col,
+                    functools.partial(bfs_parents_full, row, col, val, n))
 
 
 # --------------------------------------------------------------------------
@@ -387,39 +456,56 @@ def _cwinners_batched(backend, row, col, val, row_ptr, n, state, min_gain,
     raise ValueError(f"unknown AWAC backend {backend!r}")
 
 
-@functools.partial(
-    jax.jit, static_argnames=("n", "max_iter", "backend", "window_steps")
-)
-def _awac_loop_batched(row, col, val, row_ptr, n: int, state: MatchState,
-                       max_iter: int, min_gain, backend: str,
-                       window_steps: int):
-    b = row.shape[0]
+def awac_loop(n: int, state: MatchState, max_iter: int, min_gain,
+              cwinners_fn):
+    """Masked batched AWAC loop. ``cwinners_fn(state) -> (Cgain, Ci, Cw1,
+    Cw2, aux)`` supplies each round's Step A+B+C winners plus an int32
+    scalar accumulated across rounds (0 for the local backends; the
+    dropped-candidate count for the distributed engine's bucketed
+    exchanges). Step D + augmentation is the vmapped
+    ``single.select_and_augment`` — shared verbatim with every other
+    engine. Returns (state, iters [B], aux)."""
+    b = state.mate_row.shape[0]
     select = jax.vmap(
         lambda Cg, Ci, Cw1, Cw2, mr, mc, u, v: single.select_and_augment(
             n, Cg, Ci, Cw1, Cw2, MatchState(mr, mc, u, v), min_gain)
     )
 
     def body(carry):
-        state, iters, active = carry
-        Cgain, Ci, Cw1, Cw2 = _cwinners_batched(
-            backend, row, col, val, row_ptr, n, state, min_gain, window_steps
-        )
+        state, iters, active, aux = carry
+        Cgain, Ci, Cw1, Cw2, a = cwinners_fn(state)
         new_state, n_surv = select(Cgain, Ci, Cw1, Cw2, *state)
         keep = active[:, None]
         state = MatchState(
             *(jnp.where(keep, ns, s) for ns, s in zip(new_state, state)))
         iters = iters + active.astype(jnp.int32)
         active = active & (n_surv > 0) & (iters < max_iter)
-        return state, iters, active
+        return state, iters, active, aux + a
 
     def cond(carry):
         return carry[2].any()
 
-    state, iters, _ = jax.lax.while_loop(
+    state, iters, _, aux = jax.lax.while_loop(
         cond, body,
         # max_iter <= 0 admits no iterations, matching single._awac_loop
-        (state, jnp.zeros((b,), jnp.int32), jnp.full((b,), max_iter > 0)),
+        (state, jnp.zeros((b,), jnp.int32), jnp.full((b,), max_iter > 0),
+         jnp.array(0, jnp.int32)),
     )
+    return state, iters, aux
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n", "max_iter", "backend", "window_steps")
+)
+def _awac_loop_batched(row, col, val, row_ptr, n: int, state: MatchState,
+                       max_iter: int, min_gain, backend: str,
+                       window_steps: int):
+    def cwinners(st):
+        out = _cwinners_batched(backend, row, col, val, row_ptr, n, st,
+                                min_gain, window_steps)
+        return (*out, jnp.array(0, jnp.int32))
+
+    state, iters, _ = awac_loop(n, state, max_iter, min_gain, cwinners)
     return state, iters
 
 

@@ -31,16 +31,18 @@ import numpy as np
 from jax.experimental import enable_x64
 from jax.sharding import PartitionSpec as P
 
-from repro.core import single
+from repro.core import batch, single
 from repro.core.single import MatchState, NEG, MIN_GAIN
 from repro.sparse.csr import max_row_nnz, window_depth
 from repro.sparse.ops import (
+    batched_searchsorted_in_window,
+    batched_segment_argmax_tie,
     lex_searchsorted,
     searchsorted_in_window,
     segment_argmax_tie,
     segment_max_with_payload,
 )
-from repro.sparse.partition import partition_coo_2d
+from repro.sparse.partition import partition_coo_2d, partition_coo_2d_batched
 
 try:  # jax >= 0.6 spelling
     _shard_map = functools.partial(jax.shard_map, check_vma=False)
@@ -69,6 +71,11 @@ class GridSpec:
     def block_spec(self) -> P:
         ra = self.row_axes[0] if len(self.row_axes) == 1 else self.row_axes
         return P(ra, self.col_axis, None)
+
+    def block_spec_batched(self) -> P:
+        """PartitionSpec for [Pr, Pc, B, cap] batched block arrays."""
+        ra = self.row_axes[0] if len(self.row_axes) == 1 else self.row_axes
+        return P(ra, self.col_axis, None, None)
 
 
 def _int_fill(n):
@@ -523,3 +530,388 @@ def default_caps(n: int, m: int, pr: int, pc: int, slack: float = 2.0):
     cap1 = max(int(slack * cap_block / pc) + 16, 16)
     cap2 = max(int(slack * cap1 * pc / pr) + 16, 16)
     return cap1, cap2
+
+
+# --------------------------------------------------------------------------
+# Distributed-BATCHED engine: B instances, one shard_map dispatch (§5)
+# --------------------------------------------------------------------------
+
+
+def a2a_bucketed_batched(arrays, fills, dest, valid, n_peers: int,
+                         cap_out: int, axis_name, packed: bool = False):
+    """Batched ``a2a_bucketed``: arrays/dest/valid are [B, L] and ONE
+    collective per payload (one total when ``packed``) carries every
+    instance's buckets as [n_peers, B, cap_out(, k)] — per-message latency
+    amortizes across the whole batch instead of paying B exchanges.
+
+    Returns (out arrays list of [B, n_peers * cap_out], out_valid, dropped
+    int32 scalar summed over instances)."""
+    b, L = dest.shape
+    bix = jnp.arange(b, dtype=jnp.int32)[:, None]
+    d = jnp.where(valid, dest, n_peers)
+    order = jnp.argsort(d, axis=1, stable=True)
+    ds = jnp.take_along_axis(d, order, axis=1)
+    peers = jnp.arange(n_peers, dtype=ds.dtype)
+    start = jax.vmap(lambda s: jnp.searchsorted(s, peers))(ds)
+    posin = jnp.arange(L, dtype=jnp.int32)[None, :] - jnp.take_along_axis(
+        start, jnp.clip(ds, 0, n_peers - 1).astype(jnp.int32), axis=1
+    ).astype(jnp.int32)
+    ok = (ds < n_peers) & (posin < cap_out)
+    slot = jnp.where(ok, ds.astype(jnp.int32) * cap_out + posin,
+                     n_peers * cap_out)
+    dropped = ((ds < n_peers).sum() - ok.sum()).astype(jnp.int32)
+
+    def fill_buf(a, fv):
+        src = jnp.take_along_axis(a, order, axis=1)
+        buf = jnp.full((b, n_peers * cap_out + 1), fv, a.dtype)
+        return buf.at[bix, slot].set(src)[:, :-1]
+
+    def exchange(x):
+        shp = x.shape
+        x = x.reshape(b, n_peers, cap_out, *shp[2:])
+        x = jnp.moveaxis(x, 1, 0)  # [n_peers, B, cap_out, ...]
+        x = jax.lax.all_to_all(x, axis_name, 0, 0)
+        return jnp.moveaxis(x, 0, 1).reshape(shp)
+
+    if packed:
+        cols = []
+        for a, fv in zip(arrays, fills):
+            bf = fill_buf(a, fv)
+            if bf.dtype != jnp.int32:
+                bf = jax.lax.bitcast_convert_type(bf, jnp.int32)
+            cols.append(bf)
+        recv = exchange(jnp.stack(cols, axis=-1))
+        outs = []
+        for i, (a, fv) in enumerate(zip(arrays, fills)):
+            c = recv[..., i]
+            if a.dtype != jnp.int32:
+                c = jax.lax.bitcast_convert_type(c, a.dtype)
+            outs.append(c)
+        # validity from the first array's sentinel (mate ids use fill = n)
+        return outs, outs[0] != fills[0], dropped
+
+    outs = [exchange(fill_buf(a, fv)) for a, fv in zip(arrays, fills)]
+    vbuf = jnp.zeros((b, n_peers * cap_out + 1), jnp.int8).at[bix, slot].set(
+        ok.astype(jnp.int8))[:, :-1]
+    return outs, exchange(vbuf).astype(bool), dropped
+
+
+def safe_a2a_caps(cap_blk: int, pr: int, pc: int) -> tuple[int, int]:
+    """Bucket capacities making the two-stage exchange provably drop-free:
+    stage 1 can at worst route every local edge to one column peer
+    (cap1 = cap_blk); stage 2 at worst forwards everything it received to
+    one row peer (cap2 = pc * cap1). The bit-identity contract with
+    ``core.batch.awpm_batched`` requires that no candidate is ever dropped,
+    so these are the driver defaults."""
+    return cap_blk, pc * cap_blk
+
+
+DIST_BATCHED_BACKENDS = ("fused", "reference", "xla", "pallas")
+
+
+@functools.lru_cache(maxsize=None)
+def make_awpm_dist_batched(spec: GridSpec, n: int, b: int, cap: int,
+                           a2a_caps: tuple[int, int], max_iter: int = 1000,
+                           min_gain: float = MIN_GAIN, packed: bool = False,
+                           backend: str = "fused",
+                           window_steps: int | None = None,
+                           from_state: bool = False):
+    """Build the single-dispatch distributed-batched AWPM (DESIGN.md §5).
+
+    One shard_map dispatch runs greedy maximal -> MCM -> dual build -> AWAC
+    for all B instances: the batched engine's loop skeletons
+    (``core.batch.greedy_loop`` / ``mcm_loop`` / ``awac_loop``) carry the
+    per-instance convergence masks, and only the per-round winner
+    computations are swapped for 2D-block reductions + collectives — so the
+    result is bit-identical per instance to ``core.batch.awpm_batched`` by
+    construction. Edge state is sharded [Pr, Pc, B, cap]; all O(n) matching
+    state is replicated [B, n + 1].
+
+    backend: "fused" (default) joins Step A/B candidates against the local
+    block through the batched CSR-windowed search (the fused sweep
+    substrate, sparse/ops.py); "reference" keeps the per-block global lex
+    search. On the 1x1 grid, "xla"/"pallas" route Steps A+B+C through
+    ``core.batch``'s fused batched sweep directly (incl. the batch-grid
+    Pallas kernel) — the block is the whole instance, so no exchange is
+    needed.
+
+    Returns jitted ``run(brow, bcol, bval) -> (MatchState, iters [B],
+    dropped)`` over [Pr, Pc, B, cap] blocks. With ``from_state=True`` the
+    runner instead takes a replicated initial MatchState ([B, n + 1]
+    fields) and runs the AWAC phase only — ``run(brow, bcol, bval,
+    mate_row, mate_col, u, v)`` — the distributed analogue of
+    ``core.batch.awac_batched``.
+    """
+    pr, pc = spec.pr, spec.pc
+    if backend not in DIST_BATCHED_BACKENDS:
+        raise ValueError(f"unknown dist AWAC backend {backend!r}")
+    if backend in ("xla", "pallas") and (pr, pc) != (1, 1):
+        raise ValueError(
+            f"backend {backend!r} routes through core.batch's local sweep "
+            f"and needs the 1x1 grid, got {pr}x{pc}")
+    br = -(-n // pr)
+    bc = -(-n // pc)
+    cap1, cap2 = a2a_caps
+    row_axes = spec.row_axes if len(spec.row_axes) > 1 else spec.row_axes[0]
+    col_axis = spec.col_axis
+    all_axes = tuple(spec.row_axes) + (spec.col_axis,)
+    if window_steps is None:
+        window_steps = _search_depth(cap)
+
+    def block_fn(brow, bcol, bval, *state_args):
+        brow = brow.reshape(b, cap)
+        bcol = bcol.reshape(b, cap)
+        bval = bval.reshape(b, cap)
+        adev = jax.lax.axis_index(row_axes)
+        bdev = jax.lax.axis_index(col_axis)
+        # Per-instance CSR row_ptr over this device's global rows
+        # [adev*br, (adev+1)*br); the padding tail sits beyond bptr[:, br].
+        # Loop-invariant, hoisted out of every phase loop.
+        targets = adev * br + jnp.arange(br + 1, dtype=brow.dtype)
+        bptr = jax.vmap(
+            lambda r: jnp.searchsorted(r, targets, side="left"))(brow
+        ).astype(jnp.int32)
+
+        def gather_n(x, axis):
+            """all_gather [B, k] along ``axis`` -> replicated [B, n]
+            (device-major concat, then the padded tail sliced off)."""
+            g = jax.lax.all_gather(x, axis)
+            return jnp.moveaxis(g, 0, 1).reshape(b, -1)[:, :n]
+
+        # ---- greedy phase: per-column proposals from 2D blocks ----
+        def greedy_propose(mate_row, mate_col):
+            avail = (brow < n) \
+                & (jnp.take_along_axis(mate_col, brow, axis=1) == n) \
+                & (jnp.take_along_axis(mate_row, bcol, axis=1) == n)
+            lj = jnp.where(avail, bcol - bdev * bc, bc).astype(jnp.int32)
+            score = jnp.where(avail, bval, NEG)
+            Pg, Pidx = batched_segment_argmax_tie(score, brow, lj, bc + 1)
+            sel = jnp.clip(Pidx[:, :bc], 0)
+            has = Pidx[:, :bc] >= 0
+            pi_loc = jnp.where(
+                has, jnp.take_along_axis(brow, sel, axis=1), n
+            ).astype(jnp.int32)
+            G = jax.lax.all_gather(Pg[:, :bc], row_axes)
+            I = jax.lax.all_gather(pi_loc, row_axes)
+            g0, i0, _ = _lex_pick(G, I, [], jnp.int32(n))
+            pv = gather_n(g0, col_axis)
+            prow = gather_n(i0, col_axis)
+            return pv, jnp.where(pv > NEG, prow, n).astype(jnp.int32)
+
+        # ---- MCM phase: per-row BFS parents from 2D blocks ----
+        def mcm_parents(frontier, visited):
+            elig = (brow < n) & jnp.take_along_axis(frontier, bcol, axis=1) \
+                & (~jnp.take_along_axis(visited, brow, axis=1))
+            li = jnp.where(elig, brow - adev * br, br).astype(jnp.int32)
+            score = jnp.where(elig, bval, NEG)
+            Rg, Ridx = batched_segment_argmax_tie(score, bcol, li, br + 1)
+            sel = jnp.clip(Ridx[:, :br], 0)
+            has = Ridx[:, :br] >= 0
+            rc_loc = jnp.where(
+                has, jnp.take_along_axis(bcol, sel, axis=1), n
+            ).astype(jnp.int32)
+            # a row's edges live in ONE grid row, spread over grid columns
+            G = jax.lax.all_gather(Rg[:, :br], col_axis)
+            C = jax.lax.all_gather(rc_loc, col_axis)
+            g0, c0, _ = _lex_pick(G, C, [], jnp.int32(n))
+            pval = gather_n(g0, row_axes)
+            pcol = gather_n(c0, row_axes)
+            return pval > NEG, pcol
+
+        # ---- dual build: u, v from the mates (windowed block lookup) ----
+        def uv_state(mate_row, mate_col):
+            gi = jnp.broadcast_to(
+                (adev * br + jnp.arange(br, dtype=jnp.int32))[None, :],
+                (b, br))
+            gis = jnp.clip(gi, 0, n)
+            q = jnp.take_along_axis(mate_col, gis, axis=1)
+            pos, found = batched_searchsorted_in_window(
+                bcol, q, bptr[:, :br], bptr[:, 1:], n_steps=window_steps)
+            w = jnp.where(
+                found & (gi < n),
+                jnp.take_along_axis(bval, jnp.clip(pos, 0, cap - 1), axis=1),
+                0.0)
+            bix = jnp.arange(b, dtype=jnp.int32)[:, None]
+            # each matched edge (i, mate_col[i]) lives in exactly one block,
+            # so the psum replicates the one found weight (plus exact zeros)
+            uu = jnp.zeros((b, n + 1), jnp.float32).at[
+                bix, jnp.where(gi < n, gis, n)].set(w)
+            u = jax.lax.psum(uu, all_axes).at[:, n].set(0.0)
+            v = jnp.zeros((b, n + 1), jnp.float32).at[:, :n].set(
+                jnp.where(mate_row[:, :n] < n,
+                          jnp.take_along_axis(
+                              u, jnp.clip(mate_row[:, :n], 0, n), axis=1),
+                          0.0))
+            return MatchState(mate_row, mate_col, u, v)
+
+        # ---- AWAC Steps A+B+C: batched exchange + windowed local join ----
+        def cwinners(state):
+            mate_row, mate_col, u, v = state
+            i2 = jnp.take_along_axis(mate_row, bcol, axis=1)
+            j2 = jnp.take_along_axis(mate_col, brow, axis=1)
+            valid = (brow < n) & (i2 < n) & (j2 < n)
+            # stage 1: route to owning grid column (by j2)
+            (o_i, o_j, o_w), v1, d1 = a2a_bucketed_batched(
+                [i2, j2, bval],
+                [_int_fill(n), _int_fill(n), jnp.float32(0)],
+                j2 // bc, valid, pc, cap1, col_axis, packed=packed,
+            )
+            # stage 2: route to owning grid row (by o_i)
+            (qi, qj, qw2), qvalid, d2 = a2a_bucketed_batched(
+                [o_i, o_j, o_w],
+                [_int_fill(n), _int_fill(n), jnp.float32(0)],
+                o_i // br, v1, pr, cap2, row_axes, packed=packed,
+            )
+            if backend == "reference":
+                pos, found = jax.vmap(functools.partial(
+                    lex_searchsorted, n_steps=_search_depth(cap)
+                ))(brow, bcol, qi, qj)
+            else:  # fused sweep substrate: batched CSR-windowed search
+                li = jnp.clip(qi - adev * br, 0, br - 1)
+                in_row = qvalid & (qi - adev * br == li)
+                lo = jnp.take_along_axis(bptr, li, axis=1)
+                hi = jnp.where(
+                    in_row, jnp.take_along_axis(bptr, li + 1, axis=1), lo)
+                pos, found = batched_searchsorted_in_window(
+                    bcol, qj, lo, hi, n_steps=window_steps)
+            w1 = jnp.take_along_axis(bval, jnp.clip(pos, 0, cap - 1), axis=1)
+            gain = w1 + qw2 \
+                - jnp.take_along_axis(u, jnp.clip(qi, 0, n), axis=1) \
+                - jnp.take_along_axis(v, jnp.clip(qj, 0, n), axis=1)
+            cand = qvalid & found & (gain > min_gain) & (
+                qi > jnp.take_along_axis(mate_row, jnp.clip(qj, 0, n), axis=1))
+            # Step C: per-local-column winner (max gain, tie min row)
+            lj = jnp.where(cand, qj - bdev * bc, bc).astype(jnp.int32)
+            gm = jnp.where(cand, gain, NEG)
+            Cg, Cidx = batched_segment_argmax_tie(gm, qi, lj, bc + 1)
+            sel = jnp.clip(Cidx[:, :bc], 0)
+            has = Cidx[:, :bc] >= 0
+            ci_loc = jnp.where(
+                has, jnp.take_along_axis(qi, sel, axis=1), n
+            ).astype(jnp.int32)
+            w1_loc = jnp.where(has, jnp.take_along_axis(w1, sel, axis=1), 0.0)
+            w2_loc = jnp.where(has, jnp.take_along_axis(qw2, sel, axis=1), 0.0)
+            G = jax.lax.all_gather(Cg[:, :bc], row_axes)
+            I = jax.lax.all_gather(ci_loc, row_axes)
+            W1 = jax.lax.all_gather(w1_loc, row_axes)
+            W2 = jax.lax.all_gather(w2_loc, row_axes)
+            g0, i0, (w1_0, w2_0) = _lex_pick(G, I, [W1, W2], jnp.int32(n))
+            Cgain = gather_n(g0, col_axis)
+            Ci = gather_n(i0, col_axis)
+            Cw1 = gather_n(w1_0, col_axis)
+            Cw2 = gather_n(w2_0, col_axis)
+            Ci = jnp.where(Cgain > NEG, Ci, n).astype(jnp.int32)
+            return Cgain, Ci, Cw1, Cw2, d1 + d2
+
+        if backend in ("xla", "pallas"):
+            # 1x1 grid: the block IS the instance — Steps A+B+C run through
+            # the batched fused sweep (incl. the batch-grid Pallas kernel).
+            rptr = jax.vmap(lambda r: jnp.searchsorted(
+                r, jnp.arange(n + 2, dtype=r.dtype), side="left"))(brow
+            ).astype(jnp.int32)
+
+            def cwinners(state):  # noqa: F811 — intentional override
+                out = batch._cwinners_batched(
+                    backend, brow, bcol, bval, rptr, n, state, min_gain,
+                    window_steps)
+                return (*out, jnp.array(0, jnp.int32))
+
+        # ---- the pipeline: shared batched loop skeletons, dist winners ----
+        if from_state:
+            state0 = MatchState(*state_args)
+        else:
+            mr, mc = batch.greedy_loop(n, b, greedy_propose)
+            mr, mc = batch.mcm_loop(n, b, mr, mc, mcm_parents)
+            state0 = uv_state(mr, mc)
+        state, iters, dropped = batch.awac_loop(
+            n, state0, max_iter, min_gain, cwinners)
+        dropped = jax.lax.psum(dropped, all_axes)
+        return (state.mate_row, state.mate_col, state.u, state.v, iters,
+                dropped)
+
+    blk = spec.block_spec_batched()
+    state_specs = (P(), P(), P(), P()) if from_state else ()
+    fn = _shard_map(
+        block_fn, mesh=spec.mesh,
+        in_specs=(blk, blk, blk) + state_specs,
+        out_specs=(P(), P(), P(), P(), P(), P()),
+    )
+
+    @jax.jit
+    def run(brow, bcol, bval, *state_args):
+        mr, mc, u, v, iters, dropped = fn(brow, bcol, bval, *state_args)
+        return MatchState(mr, mc, u, v), iters, dropped
+
+    return run
+
+
+@dataclasses.dataclass
+class DistBatchedAWPM:
+    """Host driver for the single-dispatch distributed-batched AWPM: plans
+    the per-block capacity from true block occupancy, partitions the padded
+    [B, cap] batch over the grid, plans drop-free a2a bucket capacities,
+    and dispatches the cached engine (see ``awpm_dist_batched``)."""
+
+    spec: GridSpec
+    n: int
+    cap: int | None = None  # per-block capacity (None -> true occupancy)
+    a2a_caps: tuple[int, int] | None = None  # None -> safe_a2a_caps
+    max_iter: int = 1000
+    min_gain: float = MIN_GAIN
+    packed: bool = False
+    backend: str = "fused"
+
+    def partition(self, row, col, val):
+        """[B, cap] padded COO -> device-sharded [Pr, Pc, B, cap_blk] blocks
+        (plus the partition and the measured windowed-search depth)."""
+        part = partition_coo_2d_batched(
+            row, col, val, self.n, self.spec.pr, self.spec.pc, cap=self.cap)
+        sharding = jax.sharding.NamedSharding(
+            self.spec.mesh, self.spec.block_spec_batched())
+        brow = jax.device_put(part.row, sharding)
+        bcol = jax.device_put(part.col, sharding)
+        bval = jax.device_put(part.val, sharding)
+        ws = window_depth(max_row_nnz(part.row.reshape(-1, part.cap), self.n))
+        return part, brow, bcol, bval, ws
+
+    def run(self, row, col, val, state: MatchState | None = None):
+        """row/col/val: padded [B, cap] lex-sorted COO sharing n (see
+        ``core.batch.stack_graphs``). Returns (MatchState with [B, n + 1]
+        fields, awac_iters [B], dropped) — per instance bit-identical to
+        ``core.batch.awpm_batched(row, col, val, n)``. An explicit
+        replicated ``state`` skips greedy/MCM and runs the AWAC phase only
+        (the distributed ``core.batch.awac_batched``)."""
+        part, brow, bcol, bval, ws = self.partition(row, col, val)
+        caps = self.a2a_caps or safe_a2a_caps(
+            part.cap, self.spec.pr, self.spec.pc)
+        fn = make_awpm_dist_batched(
+            self.spec, self.n, part.b, part.cap, caps, self.max_iter,
+            self.min_gain, packed=self.packed, backend=self.backend,
+            window_steps=ws, from_state=state is not None)
+        # x64 trace context: every winner reduction collapses to the
+        # packed-key single pass (repro.sparse.ops), as in core.batch.
+        with enable_x64():
+            if state is not None:
+                return fn(brow, bcol, bval, *state)
+            return fn(brow, bcol, bval)
+
+
+def awpm_dist_batched(row, col, val, n: int, spec, *, cap: int | None = None,
+                      a2a_caps: tuple[int, int] | None = None,
+                      max_iter: int = 1000, min_gain: float = MIN_GAIN,
+                      packed: bool = False, backend: str = "fused"):
+    """One-shot distributed-batched AWPM on the 2D(+pod) device grid
+    (DESIGN.md §5): solves B padded [B, cap] COO instances in a single
+    shard_map dispatch with per-instance convergence masks, edge state
+    sharded [Pr, Pc, B, cap_blk] and O(n) state replicated. Per instance
+    bit-identical to ``core.batch.awpm_batched`` (itself pinned to
+    ``core.single.awpm``).
+
+    ``spec`` is a GridSpec or a Mesh (axes ("data", "model")). Returns
+    (MatchState with [B, n + 1] fields, awac_iters [B], dropped)."""
+    if isinstance(spec, jax.sharding.Mesh):
+        spec = GridSpec(spec)
+    drv = DistBatchedAWPM(spec, n, cap=cap, a2a_caps=a2a_caps,
+                          max_iter=max_iter, min_gain=min_gain,
+                          packed=packed, backend=backend)
+    return drv.run(row, col, val)

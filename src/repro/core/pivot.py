@@ -90,11 +90,15 @@ def relative_error(x: np.ndarray, x_true: np.ndarray) -> float:
 
 
 def batched_pivot_permutations(mats, metric: str = "product",
-                               backend: str = "auto"):
+                               backend: str = "auto", mesh=None):
     """AWPM row permutations for a batch of same-size matrices via ONE
-    batched matching call (core.batch.awpm_batched) — the pivot-serving
-    path: SuperLU/PARDISO-style preprocessing pipelines hold many matrices,
-    and the matching engine is the shared front-end.
+    batched matching dispatch — the pivot-serving path: SuperLU/PARDISO-
+    style preprocessing pipelines hold many matrices, and the matching
+    engine is the shared front-end. With ``mesh=None`` this is
+    ``core.batch.awpm_batched``; given a Mesh (or core.dist.GridSpec) the
+    whole batch runs across the 2D device grid through
+    ``core.dist.awpm_dist_batched`` instead — bit-identical permutations
+    either way.
 
     metric: "product" (log-weights, MC64 option-5 analogue, Table 6.3) or
     "sum" (raw |a_ij|). Each matrix is equilibrated first, as in §6.6.
@@ -115,20 +119,28 @@ def batched_pivot_permutations(mats, metric: str = "product",
                      np.abs(a_s[rr, cc]).astype(np.float32), n)
         gs.append(log_transformed(g) if metric == "product" else g)
     row, col, val = batch.stack_graphs(gs)
-    st, iters = batch.awpm_batched(row, col, val, n, backend=backend)
+    if mesh is not None:
+        from repro.core.dist import awpm_dist_batched
+
+        st, iters, _ = awpm_dist_batched(
+            np.array(row), np.array(col), np.array(val), n, mesh,
+            backend="fused" if backend == "auto" else backend)
+    else:
+        st, iters = batch.awpm_batched(row, col, val, n, backend=backend)
     mrs = np.array(st.mate_row[:, :n])
     perms = np.stack([row_permutation(mr, n) for mr in mrs])
     return perms, np.array(iters)
 
 
 def static_pivot_solve_batched(mats, bs, metric: str = "product",
-                               backend: str = "auto"):
-    """Full §6.6 pipeline for B systems: one batched AWPM call computes all
-    row permutations, then each system is equilibrated/permuted/factorized
+                               backend: str = "auto", mesh=None):
+    """Full §6.6 pipeline for B systems: one batched AWPM dispatch (local,
+    or across the device grid when ``mesh`` is given) computes all row
+    permutations, then each system is equilibrated/permuted/factorized
     (the LU itself stays per-matrix numpy — the matching is the batched hot
     path). Returns (xs [B, n], awac_iters [B])."""
     perms, iters = batched_pivot_permutations(mats, metric=metric,
-                                              backend=backend)
+                                              backend=backend, mesh=mesh)
     xs = [static_pivot_solve(a, b, perm)
           for a, b, perm in zip(mats, bs, perms)]
     return np.stack(xs), iters

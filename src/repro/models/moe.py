@@ -217,6 +217,64 @@ def awpm_route(logits, k, capacity_per_round, swap_rounds):
     return topi[0], slot[0], w[0], keep[0], aux
 
 
+def matching_route_batched(logits, k, capacity_per_round, dist_spec=None,
+                           max_iter: int = 1000):
+    """Exact BASE-layers routing through the core matching engine: each
+    round, token -> expert-slot assignment is a heavy-weight perfect
+    matching on the dense (token x slot) bipartite graph (slot s belongs to
+    expert s // capacity_per_round), solved for ALL G groups in one batched
+    dispatch (``core.batch.awpm_batched``) — or in one distributed-batched
+    shard_map dispatch across the 2D device grid when ``dist_spec`` (a
+    ``core.dist.GridSpec`` or Mesh) is present. The distributed path runs
+    eagerly (it partitions on the host), so call it outside jit.
+
+    Same contract as ``awpm_route_batched`` (round r penalizes experts the
+    token already used; slots of round r occupy [r*C, (r+1)*C)): returns
+    (expert [G,T,k], slot [G,T,k], weight [G,T,k], keep(all True), aux(0)).
+    Unlike the swap-based router this is the engine's full
+    greedy -> MCM -> AWAC pipeline, so per-round assignments admit no
+    augmenting 4-cycle at all."""
+    from repro.core import batch as core_batch
+
+    g, t, e = logits.shape
+    if t != e * capacity_per_round:
+        raise ValueError(f"tokens {t} != slots {e * capacity_per_round}")
+    aff = logits.astype(jnp.float32)
+    used = jnp.zeros((g, t, e), bool)
+    tvec = jnp.arange(t, dtype=jnp.int32)
+    # dense (token x slot) COO, row-major == lex-sorted by (row, col)
+    row = jnp.broadcast_to(jnp.repeat(tvec, t)[None, :], (g, t * t))
+    col = jnp.broadcast_to(jnp.tile(tvec, t)[None, :], (g, t * t))
+    rounds = []
+    for r in range(k):
+        a_r = jnp.where(used, aff - 1e6, aff)
+        # val[g, i*t + s] = a_r[g, i, s // C]
+        val = jnp.repeat(a_r, capacity_per_round, axis=2).reshape(g, t * t)
+        if dist_spec is not None:
+            import numpy as np
+
+            from repro.core.dist import awpm_dist_batched
+
+            st, _, _ = awpm_dist_batched(
+                np.array(row), np.array(col), np.array(val), t, dist_spec,
+                max_iter=max_iter)
+        else:
+            st, _ = core_batch.awpm_batched(row, col, val, t,
+                                            max_iter=max_iter)
+        slot_of = st.mate_col[:, :t].astype(jnp.int32)  # token -> slot
+        assign = slot_of // capacity_per_round
+        used = used | jax.nn.one_hot(assign, e, dtype=bool)
+        # slot uniqueness within (expert, round) comes from the matching
+        rounds.append((assign, slot_of % capacity_per_round))
+    topi = jnp.stack([a for a, _ in rounds], axis=2)
+    slot = jnp.stack(
+        [s + r * capacity_per_round for r, (_, s) in enumerate(rounds)],
+        axis=2)
+    sel_aff = jnp.take_along_axis(aff, topi, axis=2)
+    w = jax.nn.softmax(sel_aff, axis=-1).astype(logits.dtype)
+    return topi, slot, w, jnp.ones((g, t, k), bool), jnp.float32(0.0)
+
+
 # --------------------------- dispatch + layer --------------------------------
 
 
@@ -240,7 +298,7 @@ def _expert_ffn_grouped(pe, xe):
     return jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * u, wd)
 
 
-def moe_apply(p, x, cfg, moe):
+def moe_apply(p, x, cfg, moe, dist_spec=None):
     """x [B, S, d] -> (y [B, S, d], aux_loss).
 
     Dispatch is GROUPED: tokens are split into G groups (router_block for the
@@ -248,7 +306,14 @@ def moe_apply(p, x, cfg, moe):
     each group routed and scattered into its own [E, C_g, d] buffer. Groups
     shard over the data axes, so dispatch scatters stay shard-local and the
     only cross-device traffic is the expert einsum itself (token <-> expert
-    all_to_all under expert parallelism) — §Perf iteration E1."""
+    all_to_all under expert parallelism) — §Perf iteration E1.
+
+    With ``dist_spec`` (a ``core.dist.GridSpec``) and the AWPM router, all
+    groups route through the distributed-batched matching engine in one
+    shard_map dispatch (``matching_route_batched``) — exact BASE-layers
+    assignments instead of the swap-improvement approximation. Host path
+    only (the distributed engine partitions on the host): call outside
+    jit."""
     from repro.models.act_sharding import constrain
 
     b, s, d = x.shape
@@ -279,8 +344,12 @@ def moe_apply(p, x, cfg, moe):
 
         lgp = jnp.zeros((n_g, tbp, e), logits_g.dtype) \
             .at[:, :gb_sz].set(logits_g)
-        ti, sl, ww, _, _ = awpm_route_batched(lgp, k, cap_round,
-                                              moe.router_swap_rounds)
+        if dist_spec is not None:
+            ti, sl, ww, _, _ = matching_route_batched(lgp, k, cap_round,
+                                                      dist_spec=dist_spec)
+        else:
+            ti, sl, ww, _, _ = awpm_route_batched(lgp, k, cap_round,
+                                                  moe.router_swap_rounds)
         topi, slot, w = (ti[:, :gb_sz], sl[:, :gb_sz],
                          ww[:, :gb_sz])  # [G, gb, k]
         keep = jnp.ones((n_g, gb_sz, k), bool)

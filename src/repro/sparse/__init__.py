@@ -23,7 +23,14 @@ from repro.sparse.csr import (
     sort_coo,
     window_depth,
 )
-from repro.sparse.partition import Partition2D, partition_coo_2d
+from repro.sparse.partition import (
+    Partition2D,
+    Partition2DBatched,
+    block_occupancy,
+    partition_coo_2d,
+    partition_coo_2d_batched,
+    plan_block_cap,
+)
 
 __all__ = [
     "segment_argmax",
@@ -41,5 +48,9 @@ __all__ = [
     "sort_coo",
     "window_depth",
     "Partition2D",
+    "Partition2DBatched",
+    "block_occupancy",
     "partition_coo_2d",
+    "partition_coo_2d_batched",
+    "plan_block_cap",
 ]

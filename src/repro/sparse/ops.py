@@ -153,6 +153,27 @@ def batched_segment_max_with_payload(values, payload, segment_ids, num_segments)
     return seg_max, seg_payload
 
 
+def batched_segment_argmax_tie(values, tie, segment_ids, num_segments):
+    """Batched ``segment_argmax_tie``: values/tie/segment_ids are [B, m] with
+    per-instance segments, flattened to one offset-segment reduction (same
+    layout contract as ``batched_segment_max_with_payload``). Returned
+    seg_idx is *local* (an index into instance b's own [m] row; -1 if
+    empty) — within an instance the smallest flat index is the smallest
+    local index, so the final-level tie-break matches a per-instance call.
+    Returns (seg_max [B, num_segments], seg_idx [B, num_segments])."""
+    b, m = values.shape
+    stride = num_segments + 1
+    offs = (jnp.arange(b, dtype=segment_ids.dtype) * stride)[:, None]
+    seg_max, seg_idx = segment_argmax_tie(
+        values.reshape(-1), tie.reshape(-1), (segment_ids + offs).reshape(-1),
+        b * stride,
+    )
+    seg_max = seg_max.reshape(b, stride)[:, :num_segments]
+    seg_idx = seg_idx.reshape(b, stride)[:, :num_segments]
+    row_offs = (jnp.arange(b, dtype=seg_idx.dtype) * m)[:, None]
+    return seg_max, jnp.where(seg_idx >= 0, seg_idx - row_offs, -1)
+
+
 def batched_segment_min(values, segment_ids, num_segments):
     """Batched ``jax.ops.segment_min`` over per-instance segments, flattened
     to one offset-segment reduction (same layout contract as

@@ -3,6 +3,7 @@ XLA platform (device count must be set before jax initializes, so it cannot
 be done inside the pytest process, which already holds 1 CPU device)."""
 import os
 import pathlib
+import re
 import subprocess
 import sys
 
@@ -11,12 +12,14 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 
 def run_with_devices(script: str, n_devices: int, timeout: int = 900):
     env = dict(os.environ)
+    # strip any inherited device-count token entirely (e.g. the CI
+    # multi-device job exports one at the job level) — XLA aborts on
+    # unknown flags, so the stale token can't just be renamed
+    inherited = re.sub(r"--xla_force_host_platform_device_count=\S+", "",
+                       env.get("XLA_FLAGS", ""))
     env["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={n_devices} "
-        + env.get("XLA_FLAGS", "").replace(
-            "--xla_force_host_platform_device_count", "--ignored"
-        )
-    )
+        f"--xla_force_host_platform_device_count={n_devices} {inherited}"
+    ).strip()
     env["PYTHONPATH"] = f"{REPO / 'src'}:{env.get('PYTHONPATH', '')}"
     proc = subprocess.run(
         [sys.executable, "-c", script],
