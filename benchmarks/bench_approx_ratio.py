@@ -2,9 +2,8 @@
 Jonker-Volgenant). Paper claims: optimum on 10/16 matrices, avg 98.66%
 (min 86%, max 100%) on an extended >=100-matrix suite."""
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import graph, ref, single
+from repro.core import MatchingProblem, graph, ref, solve
 from benchmarks._util import row, time_call
 
 
@@ -18,11 +17,10 @@ def run(n_matrices=100, n=120, verbose=False):
         dense = g.to_dense().astype(np.float32)
         struct = g.structure_dense()
         _, opt = ref.exact_mwpm(dense, struct)
-        dt, (st, iters) = time_call(
-            lambda: single.awpm(jnp.asarray(g.row), jnp.asarray(g.col),
-                                jnp.asarray(g.val), g.n), iters=1, warmup=0)
+        dt, res = time_call(
+            lambda: solve(MatchingProblem.from_graph(g)), iters=1, warmup=0)
         t_total += dt
-        mr = np.array(st.mate_row[: g.n])
+        mr = np.array(res.mate_row[: g.n])
         ref.check_matching(struct, mr)
         assert ref.is_perfect(mr, g.n)
         r = ref.matching_weight(dense, mr) / opt
@@ -30,7 +28,7 @@ def run(n_matrices=100, n=120, verbose=False):
         kind = name.split("_")[0]
         per_kind.setdefault(kind, []).append(r)
         if verbose:
-            print(f"  {name}: ratio={r:.4f} iters={int(iters)}")
+            print(f"  {name}: ratio={r:.4f} iters={int(res.awac_iters)}")
     ratios = np.array(ratios)
     row("approx_ratio_mean", t_total / len(suite) * 1e6,
         f"mean={ratios.mean():.4f}")

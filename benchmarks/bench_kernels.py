@@ -46,34 +46,34 @@ def bench_awac_sweep(n: int = 2048, avg_degree: float = 8.0):
 
 def bench_awpm_batched(n: int = 24, avg_degree: float = 6.0,
                        batch_sizes=(1, 8, 32)):
-    """Aggregate matching throughput: one ``awpm_batched`` dispatch for B
-    instances vs a python loop of per-instance ``single.awpm`` calls (the
-    pre-batching serving pattern). Sized for the many-small-instances
-    regime the engine targets (MoE routing blocks, per-block pivot
-    preprocessing) — at large n the per-instance compute dominates CPU
-    dispatch and the lockstep batch loses its edge (DESIGN.md §4). Reports
-    matchings/sec for both and the aggregate speedup at each B."""
-    from repro.core import batch, graph, single
+    """Aggregate matching throughput: one batched ``api.solve`` dispatch for
+    B instances vs a python loop of per-instance single-problem ``solve``
+    calls (the pre-batching serving pattern). Sized for the
+    many-small-instances regime the engine targets (MoE routing blocks,
+    per-block pivot preprocessing) — at large n the per-instance compute
+    dominates CPU dispatch and the lockstep batch loses its edge
+    (DESIGN.md §4). Reports matchings/sec for both and the aggregate
+    speedup at each B."""
+    from repro.core import MatchingProblem, graph, solve
 
     b_max = max(batch_sizes)
     kinds = ("uniform", "circuit", "banded", "powerlaw", "antigreedy")
     gs = [graph.generate(n, avg_degree=avg_degree, kind=kinds[i % len(kinds)],
                          seed=i) for i in range(b_max)]
-    row_all, col_all, val_all = batch.stack_graphs(gs)
+    stacked = MatchingProblem.stack(gs)
+    row_all, col_all, val_all = stacked.row, stacked.col, stacked.val
 
     speedups = {}
     for b in batch_sizes:
         rows, cols, vals = row_all[:b], col_all[:b], val_all[:b]
-        dt_b, (stB, _) = time_call(
-            lambda: batch.awpm_batched(rows, cols, vals, n), iters=3,
-            warmup=1)
+        pb = MatchingProblem(row=rows, col=cols, val=vals, n=n)
+        ps = [MatchingProblem(row=rows[i], col=cols[i], val=vals[i], n=n)
+              for i in range(b)]
+        dt_b, resB = time_call(lambda: solve(pb), iters=3, warmup=1)
         dt_l, outs = time_call(
-            lambda: [single.awpm(rows[i], cols[i], vals[i], n)
-                     for i in range(b)],
-            iters=3, warmup=1)
-        wB = np.array(batch.matching_weight_batched(stB, n))
-        wL = np.array([float(single.matching_weight(st, n))
-                       for st, _ in outs])
+            lambda: [solve(ps[i]) for i in range(b)], iters=3, warmup=1)
+        wB = np.array(resB.weight)
+        wL = np.array([float(r.weight) for r in outs])
         identical = bool((wB == wL).all())
         speedups[b] = dt_l / dt_b
         row(f"awpm_batched_B{b}_n{n}", dt_b / b * 1e6,

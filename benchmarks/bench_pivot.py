@@ -1,9 +1,8 @@
 """Paper Table 6.3: static pivoting quality — relative solution error of a
 pivot-free LU after AWPM vs exact-MWPM vs identity permutation."""
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import graph, pivot, ref, single
+from repro.core import MatchingProblem, graph, pivot, ref, solve
 from benchmarks._util import row, time_call
 
 
@@ -26,9 +25,8 @@ def run(n=80, n_systems=5):
         g = graph.from_coo(rr.astype(np.int32), cc.astype(np.int32),
                            np.abs(a_s[rr, cc]).astype(np.float32), n)
         glog = pivot.log_transformed(g)
-        st, _ = single.awpm(jnp.asarray(glog.row), jnp.asarray(glog.col),
-                            jnp.asarray(glog.val), n)
-        mr_awpm = np.array(st.mate_row[:n])
+        res = solve(MatchingProblem.from_graph(glog))
+        mr_awpm = np.array(res.mate_row[:n])
         dense_log = np.where(g.structure_dense(),
                              np.log(np.maximum(np.abs(g.to_dense()), 1e-30)),
                              0.0).astype(np.float32)

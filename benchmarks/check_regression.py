@@ -3,7 +3,8 @@ BENCH_kernels.json against the committed baseline.
 
 Two checks, per row name present in BOTH files:
   1. bit-exactness flags (``weight_identical=…`` / ``weights_identical=…`` /
-     ``identical_to_batched=…`` in the derived field) must still be True —
+     ``identical_to_batched=…`` / ``identical_to_local=…`` in the derived
+     field) must still be True —
      a False here means an engine stopped agreeing with its oracle, which
      is a correctness failure no matter how fast it got;
   2. per-row throughput must not regress by more than ``--factor`` (default
@@ -24,7 +25,7 @@ import re
 import sys
 
 IDENT_RE = re.compile(
-    r"(weights?_identical|identical_to_batched)=(True|False)")
+    r"(weights?_identical|identical_to_batched|identical_to_local)=(True|False)")
 
 
 def _rows(path: str) -> dict[str, dict]:

@@ -1,54 +1,67 @@
 """Distributed AWPM on a 4x4 device grid (fake devices — the same shard_map
-program that the 512-chip dry-run lowers).
+program that the 512-chip dry-run lowers), through the unified API: the ONLY
+change vs a local solve is ``SolveOptions(grid=mesh)``, and ``plan()`` gives
+a compile-once/run-many ``Matcher`` for serving many batches.
 
-  PYTHONPATH=src python examples/distributed_matching.py
+  PYTHONPATH=src python examples/distributed_matching.py [--n 256]
 """
+import argparse
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
 
 import numpy as np  # noqa: E402
 import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
-try:  # jax >= 0.6
-    from jax.sharding import AxisType  # noqa: E402
-except ImportError:  # jax 0.4.x: axes are Auto already
-    AxisType = None
-
-from repro.core import graph, ref, single  # noqa: E402
-from repro.core.dist import DistAWPM, GridSpec, default_caps  # noqa: E402
+from repro.core import (  # noqa: E402
+    MatchingProblem, SolveOptions, graph, plan, ref, solve,
+)
+from repro.core.dist import make_mesh  # noqa: E402
 
 
-def main(n=256, degree=8.0, seed=0):
-    if AxisType is None:
-        mesh = jax.make_mesh((4, 4), ("data", "model"))
-    else:
-        mesh = jax.make_mesh((4, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
-    spec = GridSpec(mesh, ("data",), "model")
+def main(n=256, degree=8.0, seed=0, batch=4):
+    mesh = make_mesh((4, 4))
     g = graph.generate(n, avg_degree=degree, kind="uniform", seed=seed)
-    print(f"matrix n={g.n} nnz={g.nnz} on a {spec.pr}x{spec.pc} process grid "
+    print(f"matrix n={g.n} nnz={g.nnz} on a 4x4 process grid "
           f"({len(jax.devices())} devices)")
 
-    caps = default_caps(g.n, g.nnz, spec.pr, spec.pc, slack=4.0)
-    drv = DistAWPM(spec, g.n,
-                   cap=((g.nnz // 16 + 63) // 64 * 64 + 64), a2a_caps=caps)
-    st, iters, dropped = drv.run(g)
-    w = float(single.matching_weight(st, g.n))
-    print(f"distributed AWPM: weight={w:.3f}, AWAC rounds={int(iters)}, "
-          f"dropped-requests={int(dropped)}")
+    # one-shot: identical call shape to the local path, plus grid=
+    problem = MatchingProblem.from_graph(g)
+    res = solve(problem, SolveOptions(grid=mesh))
+    print(f"distributed solve(): weight={float(res.weight):.3f}, "
+          f"AWAC rounds={int(res.awac_iters)}, perfect={bool(res.perfect)}")
 
-    stS, _ = single.awpm(jnp.asarray(g.row), jnp.asarray(g.col),
-                         jnp.asarray(g.val), g.n)
-    same = np.array_equal(np.array(st.mate_row[: g.n]),
-                          np.array(stS.mate_row[: g.n]))
-    print(f"bit-identical to single-device implementation: {same}")
+    res_local = solve(problem)
+    same = np.array_equal(np.array(res.mate_row[:n]),
+                          np.array(res_local.mate_row[:n]))
+    print(f"bit-identical to the local solve: {same}")
+    assert same, "distributed result diverged from the local solve"
 
     dense = g.to_dense().astype(np.float32)
     _, opt = ref.exact_mwpm(dense, g.structure_dense())
-    print(f"approximation ratio: {w / opt:.4f}")
+    print(f"approximation ratio: {float(res.weight) / opt:.4f}")
+
+    # serving: plan once (capacity planning + engine build), run many
+    gs = [graph.generate(n, avg_degree=degree, kind="uniform", seed=seed + i)
+          for i in range(batch)]
+    batch_problem = MatchingProblem.stack(gs)
+    matcher = plan(batch_problem, SolveOptions(grid=mesh))
+    print(f"planned: {matcher}")
+    res_b = matcher(batch_problem)
+    res_b2 = matcher(MatchingProblem.stack(list(reversed(gs))))
+    same_b = np.array_equal(np.array(res_b.mate_row[0]),
+                            np.array(res_b2.mate_row[-1]))
+    print(f"matcher: B={batch} weights="
+          f"{np.round(np.array(res_b.weight), 2)}, reuse across calls "
+          f"bit-identical: {same_b}")
+    assert same_b, "Matcher reuse diverged across calls"
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--degree", type=float, default=8.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+    main(n=args.n, degree=args.degree, seed=args.seed, batch=args.batch)

@@ -9,9 +9,8 @@ error against (a) no pre-pivoting and (b) the exact MWPM permutation.
   PYTHONPATH=src python examples/static_pivoting_solver.py
 """
 import numpy as np
-import jax.numpy as jnp
 
-from repro.core import graph, pivot, ref, single
+from repro.core import MatchingProblem, graph, pivot, ref, solve
 
 
 def _ill_conditioned_system(n, seed):
@@ -33,10 +32,10 @@ def main(n=120, seed=0):
     g = graph.from_coo(rr.astype(np.int32), cc.astype(np.int32),
                        np.abs(a_s[rr, cc]).astype(np.float32), n)
     glog = pivot.log_transformed(g)
-    st, iters = single.awpm(jnp.asarray(glog.row), jnp.asarray(glog.col),
-                            jnp.asarray(glog.val), n)
-    mr = np.array(st.mate_row[:n])
-    print(f"AWPM (product metric): perfect matching in {int(iters)} AWAC rounds")
+    res = solve(MatchingProblem.from_graph(glog))
+    mr = np.array(res.mate_row[:n])
+    print(f"AWPM (product metric): perfect matching in "
+          f"{int(res.awac_iters)} AWAC rounds")
 
     for name, perm in [("no pivoting", np.arange(n)), ("AWPM", mr)]:
         try:
@@ -57,7 +56,7 @@ def main(n=120, seed=0):
 
 def main_batched(n=96, n_systems=4, seed=0):
     """Pivot serving: B independent ill-conditioned systems, ALL row
-    permutations from one ``core.batch.awpm_batched`` dispatch, then a
+    permutations from one batched ``api.solve`` dispatch, then a
     pivot-free LU solve per system."""
     systems = [_ill_conditioned_system(n, seed + i) for i in range(n_systems)]
     mats = [s[0] for s in systems]

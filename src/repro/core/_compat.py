@@ -1,0 +1,27 @@
+"""Deprecation plumbing for the pre-facade entry points.
+
+The legacy surface (``single.awpm``, ``batch.awpm_batched``,
+``dist.awpm_dist_batched`` and the ``DistAWPM`` / ``DistBatchedAWPM`` /
+``make_awpm_dist_batched`` factory zoo) stays callable and bit-identical, but
+every call funnels through :func:`warn_legacy` so downstream code migrates to
+``repro.core.api`` (``solve`` / ``plan``).
+"""
+from __future__ import annotations
+
+import warnings
+
+
+def warn_legacy(old: str, new: str, stacklevel: int = 3) -> None:
+    """Emit the facade-migration DeprecationWarning for a legacy entry point.
+
+    The default ``stacklevel=3`` points at the *caller* of a deprecated
+    function (warn_legacy -> shim -> caller); dataclass shims warning from
+    ``__post_init__`` pass 4 (the generated ``__init__`` adds a frame).
+    """
+    warnings.warn(
+        f"{old} is deprecated; use {new} from repro.core.api instead "
+        f"(one solve()/plan() facade across single, batched, and "
+        f"distributed AWPM)",
+        DeprecationWarning,
+        stacklevel=stacklevel,
+    )

@@ -32,9 +32,9 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental import enable_x64
 
 from repro.core import single
+from repro.core._compat import warn_legacy
 from repro.core.single import MIN_GAIN, MatchState, NEG
 from repro.sparse.csr import batched_row_ptr_from_sorted
 from repro.sparse.ops import (
@@ -188,8 +188,10 @@ def greedy_maximal_batched(row, col, val, n: int):
     each [B, n + 1].
 
     Traced under x64 so both per-round reductions run as single packed-key
-    passes (bit-identical to the two-pass reference — sparse.ops)."""
-    with enable_x64():
+    passes (bit-identical to the two-pass reference — sparse.ops); under an
+    outer jit the scope is a no-op and the two-pass fallback runs (see
+    ``single._x64_scope``)."""
+    with single._x64_scope(row):
         return _greedy_maximal_batched(row, col, val, n)
 
 
@@ -350,8 +352,9 @@ def mcm_batched(row, col, val, n: int, mate_row, mate_col):
     offset-segment primitives). Returns (mate_row, mate_col).
 
     Traced under x64 so each BFS layer's winner reduction runs as a single
-    packed-key pass (bit-identical to the two-pass reference)."""
-    with enable_x64():
+    packed-key pass (bit-identical to the two-pass reference); no-op under
+    an outer jit (see ``single._x64_scope``)."""
+    with single._x64_scope(row):
         return _mcm_batched(row, col, val, n, mate_row, mate_col)
 
 
@@ -530,8 +533,9 @@ def awac_batched(row, col, val, n: int, state: MatchState,
         row_ptr = batched_row_ptr_from_sorted(row, n)
     if backend == "xla":
         # Same x64 trace context as single.awac: Step C runs as one
-        # packed-key uint64 segment_max over the whole batch.
-        with enable_x64():
+        # packed-key uint64 segment_max over the whole batch (no-op under
+        # an outer jit, see single._x64_scope).
+        with single._x64_scope(row):
             return _awac_loop_batched(row, col, val, row_ptr, n, state,
                                       max_iter, min_gain, backend,
                                       window_steps)
@@ -542,11 +546,25 @@ def awac_batched(row, col, val, n: int, state: MatchState,
 def awpm_batched(row, col, val, n: int, max_iter: int = 1000,
                  min_gain: float = MIN_GAIN, backend: str = "auto",
                  row_ptr=None, window_steps: int | None = None):
+    """Deprecated alias of the batched pipeline — use ``repro.core.api.solve``
+    with a batched ``MatchingProblem``."""
+    warn_legacy("repro.core.batch.awpm_batched", "solve()")
+    return _awpm_batched(row, col, val, n, max_iter=max_iter,
+                         min_gain=min_gain, backend=backend, row_ptr=row_ptr,
+                         window_steps=window_steps)
+
+
+def _awpm_batched(row, col, val, n: int, max_iter: int = 1000,
+                  min_gain: float = MIN_GAIN, backend: str = "auto",
+                  row_ptr=None, window_steps: int | None = None):
     """Full batched pipeline: greedy maximal -> MCM -> AWAC for B instances
     in three dispatches total. row/col/val are [B, cap] padded lex-sorted COO
     sharing n (see ``stack_graphs``). Returns (MatchState with [B, n + 1]
     fields, awac_iters [B]) — per instance bit-identical to
-    ``single.awpm(row[b], col[b], val[b], n)`` on the same backend."""
+    ``single._awpm(row[b], col[b], val[b], n)`` on the same backend.
+
+    Internal engine behind ``repro.core.api.solve`` (the batched dispatch
+    target) and the deprecated ``awpm_batched`` shim."""
     window_steps = _resolve_window_steps_batched(row, n, window_steps)
     if row_ptr is None:
         row_ptr = batched_row_ptr_from_sorted(row, n)

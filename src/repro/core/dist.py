@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 from typing import Sequence
 
 import jax
@@ -32,6 +31,7 @@ from jax.experimental import enable_x64
 from jax.sharding import PartitionSpec as P
 
 from repro.core import batch, single
+from repro.core._compat import warn_legacy
 from repro.core.single import MatchState, NEG, MIN_GAIN
 from repro.sparse.csr import max_row_nnz, window_depth
 from repro.sparse.ops import (
@@ -50,6 +50,19 @@ except AttributeError:  # jax 0.4.x: experimental module, check_rep kwarg
     from jax.experimental.shard_map import shard_map as _shard_map_exp
 
     _shard_map = functools.partial(_shard_map_exp, check_rep=False)
+
+
+def make_mesh(shape, axes=("data", "model")):
+    """Version-proof ``jax.make_mesh`` — THE mesh builder to pair with
+    ``GridSpec`` / ``api.SolveOptions(grid=...)``: explicit Auto axis types
+    on jax >= 0.6 (the shard_map engines need Auto axes), plain make_mesh
+    on 0.4.x where every axis is Auto already."""
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(shape))
+    except ImportError:
+        return jax.make_mesh(shape, axes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,7 +96,10 @@ def _int_fill(n):
 
 
 def _search_depth(cap: int) -> int:
-    return max(1, math.ceil(math.log2(max(cap, 2))) + 1)
+    """Alias of ``sparse.csr.window_depth`` — ONE formula for "rounds needed
+    to binary-search a window of ``cap`` entries", so a plan-time pinned
+    depth (api.Matcher) and the run-time measured depth can never drift."""
+    return window_depth(cap)
 
 
 def a2a_bucketed(arrays, fills, dest, valid, n_peers: int, cap_out: int,
@@ -460,7 +476,9 @@ def make_dist_mcm(spec: GridSpec, n: int, cap: int):
 
 @dataclasses.dataclass
 class DistAWPM:
-    """End-to-end distributed AWPM on a GridSpec. Partitions the graph,
+    """Deprecated three-dispatch distributed driver — use
+    ``repro.core.api.solve`` / ``plan`` (which route through the
+    single-dispatch distributed-batched engine). Partitions the graph,
     builds the three jitted phases, runs them in sequence."""
 
     spec: GridSpec
@@ -473,6 +491,8 @@ class DistAWPM:
     backend: str = "fused"
 
     def __post_init__(self):
+        warn_legacy("repro.core.dist.DistAWPM", "solve()/plan()",
+                    stacklevel=4)
         self._greedy = make_dist_greedy_maximal(self.spec, self.n, self.cap)
         self._mcm = make_dist_mcm(self.spec, self.n, self.cap)
         self._awac_cache = {}
@@ -610,12 +630,12 @@ DIST_BATCHED_BACKENDS = ("fused", "reference", "xla", "pallas")
 
 
 @functools.lru_cache(maxsize=None)
-def make_awpm_dist_batched(spec: GridSpec, n: int, b: int, cap: int,
-                           a2a_caps: tuple[int, int], max_iter: int = 1000,
-                           min_gain: float = MIN_GAIN, packed: bool = False,
-                           backend: str = "fused",
-                           window_steps: int | None = None,
-                           from_state: bool = False):
+def _make_awpm_dist_batched(spec: GridSpec, n: int, b: int, cap: int,
+                            a2a_caps: tuple[int, int], max_iter: int = 1000,
+                            min_gain: float = MIN_GAIN, packed: bool = False,
+                            backend: str = "fused",
+                            window_steps: int | None = None,
+                            from_state: bool = False):
     """Build the single-dispatch distributed-batched AWPM (DESIGN.md §5).
 
     One shard_map dispatch runs greedy maximal -> MCM -> dual build -> AWAC
@@ -846,11 +866,13 @@ def make_awpm_dist_batched(spec: GridSpec, n: int, b: int, cap: int,
 
 
 @dataclasses.dataclass
-class DistBatchedAWPM:
+class _DistBatchedAWPM:
     """Host driver for the single-dispatch distributed-batched AWPM: plans
     the per-block capacity from true block occupancy, partitions the padded
     [B, cap] batch over the grid, plans drop-free a2a bucket capacities,
-    and dispatches the cached engine (see ``awpm_dist_batched``)."""
+    and dispatches the cached engine. Internal engine behind
+    ``repro.core.api.solve``/``plan`` (grid dispatch target) and the
+    deprecated ``DistBatchedAWPM`` / ``awpm_dist_batched`` shims."""
 
     spec: GridSpec
     n: int
@@ -860,6 +882,7 @@ class DistBatchedAWPM:
     min_gain: float = MIN_GAIN
     packed: bool = False
     backend: str = "fused"
+    window_steps: int | None = None  # None -> measured from the partition
 
     def partition(self, row, col, val):
         """[B, cap] padded COO -> device-sharded [Pr, Pc, B, cap_blk] blocks
@@ -884,7 +907,15 @@ class DistBatchedAWPM:
         part, brow, bcol, bval, ws = self.partition(row, col, val)
         caps = self.a2a_caps or safe_a2a_caps(
             part.cap, self.spec.pr, self.spec.pc)
-        fn = make_awpm_dist_batched(
+        if self.window_steps is not None:
+            # explicit pin (api.plan): extra search depth never changes a
+            # windowed-search result, so any depth >= the measured one is
+            # bit-identical — and a pinned depth keys one compiled engine
+            # across run() calls with varying data. Clamped UP to the
+            # measured need so an undersized pin can never silently miss
+            # completion edges.
+            ws = max(ws, self.window_steps)
+        fn = _make_awpm_dist_batched(
             self.spec, self.n, part.b, part.cap, caps, self.max_iter,
             self.min_gain, packed=self.packed, backend=self.backend,
             window_steps=ws, from_state=state is not None)
@@ -896,22 +927,63 @@ class DistBatchedAWPM:
             return fn(brow, bcol, bval)
 
 
-def awpm_dist_batched(row, col, val, n: int, spec, *, cap: int | None = None,
-                      a2a_caps: tuple[int, int] | None = None,
-                      max_iter: int = 1000, min_gain: float = MIN_GAIN,
-                      packed: bool = False, backend: str = "fused"):
+@dataclasses.dataclass
+class DistBatchedAWPM(_DistBatchedAWPM):
+    """Deprecated host driver — use ``repro.core.api.solve`` (one-shot) or
+    ``repro.core.api.plan`` (compile-once/run-many ``Matcher``)."""
+
+    def __post_init__(self):
+        warn_legacy("repro.core.dist.DistBatchedAWPM", "plan()",
+                    stacklevel=4)
+
+
+def make_awpm_dist_batched(spec: GridSpec, n: int, b: int, cap: int,
+                           a2a_caps: tuple[int, int], max_iter: int = 1000,
+                           min_gain: float = MIN_GAIN, packed: bool = False,
+                           backend: str = "fused",
+                           window_steps: int | None = None,
+                           from_state: bool = False):
+    """Deprecated factory for the raw block-level engine — use
+    ``repro.core.api.plan`` (the ``Matcher`` handle pins capacities and the
+    compiled engine at plan time)."""
+    warn_legacy("repro.core.dist.make_awpm_dist_batched", "plan()")
+    return _make_awpm_dist_batched(
+        spec, n, b, cap, a2a_caps, max_iter, min_gain, packed=packed,
+        backend=backend, window_steps=window_steps, from_state=from_state)
+
+
+def _awpm_dist_batched(row, col, val, n: int, spec, *,
+                       cap: int | None = None,
+                       a2a_caps: tuple[int, int] | None = None,
+                       max_iter: int = 1000, min_gain: float = MIN_GAIN,
+                       packed: bool = False, backend: str = "fused"):
     """One-shot distributed-batched AWPM on the 2D(+pod) device grid
     (DESIGN.md §5): solves B padded [B, cap] COO instances in a single
     shard_map dispatch with per-instance convergence masks, edge state
     sharded [Pr, Pc, B, cap_blk] and O(n) state replicated. Per instance
-    bit-identical to ``core.batch.awpm_batched`` (itself pinned to
-    ``core.single.awpm``).
+    bit-identical to ``core.batch._awpm_batched`` (itself pinned to
+    ``core.single._awpm``).
 
     ``spec`` is a GridSpec or a Mesh (axes ("data", "model")). Returns
-    (MatchState with [B, n + 1] fields, awac_iters [B], dropped)."""
+    (MatchState with [B, n + 1] fields, awac_iters [B], dropped).
+
+    Internal engine behind ``repro.core.api.solve`` (grid dispatch target)
+    and the deprecated ``awpm_dist_batched`` shim."""
     if isinstance(spec, jax.sharding.Mesh):
         spec = GridSpec(spec)
-    drv = DistBatchedAWPM(spec, n, cap=cap, a2a_caps=a2a_caps,
-                          max_iter=max_iter, min_gain=min_gain,
-                          packed=packed, backend=backend)
+    drv = _DistBatchedAWPM(spec, n, cap=cap, a2a_caps=a2a_caps,
+                           max_iter=max_iter, min_gain=min_gain,
+                           packed=packed, backend=backend)
     return drv.run(row, col, val)
+
+
+def awpm_dist_batched(row, col, val, n: int, spec, *, cap: int | None = None,
+                      a2a_caps: tuple[int, int] | None = None,
+                      max_iter: int = 1000, min_gain: float = MIN_GAIN,
+                      packed: bool = False, backend: str = "fused"):
+    """Deprecated alias of the distributed-batched pipeline — use
+    ``repro.core.api.solve`` with ``SolveOptions(grid=...)``."""
+    warn_legacy("repro.core.dist.awpm_dist_batched", "solve()")
+    return _awpm_dist_batched(
+        row, col, val, n, spec, cap=cap, a2a_caps=a2a_caps,
+        max_iter=max_iter, min_gain=min_gain, packed=packed, backend=backend)

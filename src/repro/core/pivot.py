@@ -94,18 +94,17 @@ def batched_pivot_permutations(mats, metric: str = "product",
     """AWPM row permutations for a batch of same-size matrices via ONE
     batched matching dispatch — the pivot-serving path: SuperLU/PARDISO-
     style preprocessing pipelines hold many matrices, and the matching
-    engine is the shared front-end. With ``mesh=None`` this is
-    ``core.batch.awpm_batched``; given a Mesh (or core.dist.GridSpec) the
-    whole batch runs across the 2D device grid through
-    ``core.dist.awpm_dist_batched`` instead — bit-identical permutations
-    either way.
+    engine is the shared front-end. One ``api.solve`` call either way:
+    ``mesh=None`` runs the local batched engine; a Mesh (or
+    ``core.dist.GridSpec``) runs the whole batch across the 2D device grid
+    — bit-identical permutations.
 
     metric: "product" (log-weights, MC64 option-5 analogue, Table 6.3) or
     "sum" (raw |a_ij|). Each matrix is equilibrated first, as in §6.6.
     Returns (perms [B, n] int64, awac_iters [B])."""
     if metric not in ("product", "sum"):
         raise ValueError(f"unknown pivot metric {metric!r}")
-    from repro.core import batch
+    from repro.core.api import MatchingProblem, SolveOptions, solve
     from repro.core.graph import from_coo
 
     n = mats[0].shape[0]
@@ -118,18 +117,11 @@ def batched_pivot_permutations(mats, metric: str = "product",
         g = from_coo(rr.astype(np.int32), cc.astype(np.int32),
                      np.abs(a_s[rr, cc]).astype(np.float32), n)
         gs.append(log_transformed(g) if metric == "product" else g)
-    row, col, val = batch.stack_graphs(gs)
-    if mesh is not None:
-        from repro.core.dist import awpm_dist_batched
-
-        st, iters, _ = awpm_dist_batched(
-            np.array(row), np.array(col), np.array(val), n, mesh,
-            backend="fused" if backend == "auto" else backend)
-    else:
-        st, iters = batch.awpm_batched(row, col, val, n, backend=backend)
-    mrs = np.array(st.mate_row[:, :n])
+    res = solve(MatchingProblem.stack(gs),
+                SolveOptions(backend=backend, grid=mesh))
+    mrs = np.array(res.mate_row[:, :n])
     perms = np.stack([row_permutation(mr, n) for mr in mrs])
-    return perms, np.array(iters)
+    return perms, np.array(res.awac_iters)
 
 
 def static_pivot_solve_batched(mats, bs, metric: str = "product",

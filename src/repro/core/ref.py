@@ -19,14 +19,14 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.constants import MIN_GAIN
+
 try:  # exact oracle
     from scipy.optimize import linear_sum_assignment
 
     HAVE_SCIPY = True
 except Exception:  # pragma: no cover
     HAVE_SCIPY = False
-
-MIN_GAIN = 1e-6
 
 
 def matching_weight(dense_val, mate_row):

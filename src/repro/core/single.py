@@ -19,6 +19,7 @@ Conventions (everywhere in repro.core):
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import NamedTuple
 
@@ -26,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
+from repro.core._compat import warn_legacy
+from repro.core.constants import MIN_GAIN
 from repro.sparse.csr import max_row_nnz, row_ptr_from_sorted, window_depth
 from repro.sparse.ops import (
     lex_searchsorted,
@@ -34,7 +37,6 @@ from repro.sparse.ops import (
 )
 
 NEG = -jnp.inf
-MIN_GAIN = 1e-6
 
 # Fallback windowed-search depth when the row array is a tracer and the max
 # row degree cannot be measured on the host (covers any int32-sized window).
@@ -414,9 +416,34 @@ def resolve_backend(backend: str) -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
+def _x64_scope(row):
+    """The packed-key single-pass reductions (repro.sparse.ops) need an
+    x64-enabled TRACE context — but entering ``enable_x64`` in the middle of
+    an outer trace promotes fresh loop carries to int64 while existing
+    values stay int32 (while_loop carry type mismatch). Inside an outer jit
+    the scope is skipped and the two-pass fallback runs instead
+    (bit-identical by the sparse.ops contract)."""
+    if isinstance(row, jax.core.Tracer):
+        return contextlib.nullcontext()
+    return enable_x64()
+
+
 def _resolve_window_steps(row, n, window_steps):
+    cap = int(row.shape[-1])
     if window_steps is not None:
-        return int(window_steps)
+        ws = int(window_steps)
+        # a row holds at most min(cap, n) entries, so a depth covering that
+        # bound provably resolves every window — no need to measure
+        if ws >= window_depth(min(cap, n)):
+            return ws
+        # an undersized override is clamped UP: extra depth never changes a
+        # windowed-search result, but under-depth would silently miss
+        # completion edges — the override may add depth, never break
+        # correctness. Under a trace the need cannot be measured, so the
+        # provable bound stands in for it.
+        if isinstance(row, jax.core.Tracer):
+            return window_depth(min(cap, n))
+        return max(ws, window_depth(max_row_nnz(row, n)))
     if isinstance(row, jax.core.Tracer):
         return FALLBACK_WINDOW_STEPS
     return window_depth(max_row_nnz(row, n))
@@ -461,17 +488,31 @@ def awac(row, col, val, n: int, state: MatchState, max_iter: int = 1000,
     if backend == "xla":
         # x64-enabled trace context lets Step C run as ONE packed-key uint64
         # segment_max (see repro.sparse.ops); inputs/outputs stay f32/i32.
-        with enable_x64():
+        # Under an outer jit the scope is a no-op (see _x64_scope).
+        with _x64_scope(row):
             return _awac_loop(row, col, val, row_ptr, n, state, max_iter,
                               min_gain, backend, window_steps)
     return _awac_loop(row, col, val, row_ptr, n, state, max_iter, min_gain,
                       backend, window_steps)
 
 
-def awpm(row, col, val, n: int, max_iter: int = 1000, min_gain: float = MIN_GAIN,
-         backend: str = "auto"):
-    """Full pipeline: greedy maximal -> MCM -> AWAC. Returns (state, awac_iters)."""
+def _awpm(row, col, val, n: int, max_iter: int = 1000,
+          min_gain: float = MIN_GAIN, backend: str = "auto",
+          window_steps: int | None = None):
+    """Full pipeline: greedy maximal -> MCM -> AWAC. Returns (state, awac_iters).
+
+    Internal engine behind ``repro.core.api.solve`` (the single-instance
+    dispatch target) and the deprecated ``awpm`` shim.
+    """
     st = greedy_maximal(row, col, val, n)
     st = mcm(row, col, val, n, st.mate_row, st.mate_col)
     return awac(row, col, val, n, st, max_iter=max_iter, min_gain=min_gain,
-                backend=backend)
+                backend=backend, window_steps=window_steps)
+
+
+def awpm(row, col, val, n: int, max_iter: int = 1000, min_gain: float = MIN_GAIN,
+         backend: str = "auto"):
+    """Deprecated alias of the full pipeline — use ``repro.core.api.solve``."""
+    warn_legacy("repro.core.single.awpm", "solve()")
+    return _awpm(row, col, val, n, max_iter=max_iter, min_gain=min_gain,
+                 backend=backend)

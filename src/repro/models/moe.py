@@ -223,8 +223,8 @@ def matching_route_batched(logits, k, capacity_per_round, dist_spec=None,
     round, token -> expert-slot assignment is a heavy-weight perfect
     matching on the dense (token x slot) bipartite graph (slot s belongs to
     expert s // capacity_per_round), solved for ALL G groups in one batched
-    dispatch (``core.batch.awpm_batched``) — or in one distributed-batched
-    shard_map dispatch across the 2D device grid when ``dist_spec`` (a
+    ``api.solve`` dispatch — or in one distributed-batched shard_map
+    dispatch across the 2D device grid when ``dist_spec`` (a
     ``core.dist.GridSpec`` or Mesh) is present. The distributed path runs
     eagerly (it partitions on the host), so call it outside jit.
 
@@ -234,7 +234,7 @@ def matching_route_batched(logits, k, capacity_per_round, dist_spec=None,
     Unlike the swap-based router this is the engine's full
     greedy -> MCM -> AWAC pipeline, so per-round assignments admit no
     augmenting 4-cycle at all."""
-    from repro.core import batch as core_batch
+    from repro.core.api import MatchingProblem, SolveOptions, solve
 
     g, t, e = logits.shape
     if t != e * capacity_per_round:
@@ -245,23 +245,14 @@ def matching_route_batched(logits, k, capacity_per_round, dist_spec=None,
     # dense (token x slot) COO, row-major == lex-sorted by (row, col)
     row = jnp.broadcast_to(jnp.repeat(tvec, t)[None, :], (g, t * t))
     col = jnp.broadcast_to(jnp.tile(tvec, t)[None, :], (g, t * t))
+    opts = SolveOptions(max_iter=max_iter, grid=dist_spec)
     rounds = []
     for r in range(k):
         a_r = jnp.where(used, aff - 1e6, aff)
         # val[g, i*t + s] = a_r[g, i, s // C]
         val = jnp.repeat(a_r, capacity_per_round, axis=2).reshape(g, t * t)
-        if dist_spec is not None:
-            import numpy as np
-
-            from repro.core.dist import awpm_dist_batched
-
-            st, _, _ = awpm_dist_batched(
-                np.array(row), np.array(col), np.array(val), t, dist_spec,
-                max_iter=max_iter)
-        else:
-            st, _ = core_batch.awpm_batched(row, col, val, t,
-                                            max_iter=max_iter)
-        slot_of = st.mate_col[:, :t].astype(jnp.int32)  # token -> slot
+        res = solve(MatchingProblem(row=row, col=col, val=val, n=t), opts)
+        slot_of = res.mate_col[:, :t].astype(jnp.int32)  # token -> slot
         assign = slot_of // capacity_per_round
         used = used | jax.nn.one_hot(assign, e, dtype=bool)
         # slot uniqueness within (expert, round) comes from the matching

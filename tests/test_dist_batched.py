@@ -23,15 +23,8 @@ HEADER = r"""
 import numpy as np, jax, jax.numpy as jnp
 from repro.core import batch, graph, ref, single
 from repro.core.single import MatchState
-from repro.core.dist import DistBatchedAWPM, GridSpec, awpm_dist_batched
-
-
-def make_mesh(shape, axes=("data", "model")):
-    try:  # jax >= 0.6: explicit Auto axis types
-        from jax.sharding import AxisType
-        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
-    except ImportError:  # jax 0.4.x: all axes are Auto already
-        return jax.make_mesh(shape, axes)
+from repro.core.dist import (DistBatchedAWPM, GridSpec, awpm_dist_batched,
+                             make_mesh)
 
 
 def check_identical(stB, itB, stD, itD, msg=""):
