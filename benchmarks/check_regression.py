@@ -1,12 +1,15 @@
 """Benchmark regression gate (CI satellite): compare a freshly measured
-BENCH_kernels.json against the committed baseline.
+BENCH_*.json (kernels in the bench-gate job, paper_eval in the docs job)
+against the committed baseline.
 
 Two checks, per row name present in BOTH files:
-  1. bit-exactness flags (``weight_identical=…`` / ``weights_identical=…`` /
-     ``identical_to_batched=…`` / ``identical_to_local=…`` in the derived
+  1. correctness flags (``weight_identical=…`` / ``weights_identical=…`` /
+     ``identical_to_batched=…`` / ``identical_to_local=…`` /
+     ``identical_to_reference=…`` / ``certified_sound=…`` in the derived
      field) must still be True —
-     a False here means an engine stopped agreeing with its oracle, which
-     is a correctness failure no matter how fast it got;
+     a False here means an engine stopped agreeing with its oracle (or a
+     dual certificate stopped bounding the optimum), which is a
+     correctness failure no matter how fast it got;
   2. per-row throughput must not regress by more than ``--factor`` (default
      2.5x; shared-runner wall clocks are noisy, so the gate only catches
      step-function regressions, not percent-level drift).
@@ -25,7 +28,8 @@ import re
 import sys
 
 IDENT_RE = re.compile(
-    r"(weights?_identical|identical_to_batched|identical_to_local)=(True|False)")
+    r"(weights?_identical|identical_to_batched|identical_to_local"
+    r"|identical_to_reference|certified_sound)=(True|False)")
 
 
 def _rows(path: str) -> dict[str, dict]:
@@ -47,7 +51,7 @@ def check(baseline: dict[str, dict], fresh: dict[str, dict],
         for key, ok in _ident_flags(f.get("derived", "")):
             if not ok:
                 failures.append(
-                    f"{name}: bit-exactness flag {key} is False "
+                    f"{name}: correctness flag {key} is False "
                     f"(derived={f['derived']!r})")
         bu, fu = b.get("us_per_call"), f.get("us_per_call")
         if bu and fu and fu > factor * bu:
@@ -77,7 +81,7 @@ def main() -> None:
     if failures:
         sys.exit(1)
     print(f"# regression gate OK: {n} shared rows within {args.factor}x, "
-          f"all bit-exactness flags True")
+          f"all correctness flags True")
 
 
 if __name__ == "__main__":

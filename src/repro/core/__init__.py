@@ -7,7 +7,7 @@ compile-once/run-many :class:`Matcher`). The pre-facade entry points
 (``single.awpm`` / ``batch.awpm_batched`` / ``dist.awpm_dist_batched`` and
 the ``Dist*`` driver zoo) remain as bit-identical deprecation shims.
 """
-from repro.core import api, batch, graph, pivot, ref, single
+from repro.core import api, batch, dual, graph, pivot, ref, single
 from repro.core.api import (
     BACKENDS,
     Matcher,
@@ -19,22 +19,27 @@ from repro.core.api import (
     solve,
 )
 from repro.core.constants import MIN_GAIN
+from repro.core.dual import DualCertificate, certify, dual_certificate
 from repro.core.graph import BipartiteGraph, from_coo, generate, matrix_suite
 
 __all__ = [
     "api",
     "batch",
+    "dual",
     "graph",
     "pivot",
     "ref",
     "single",
     "BACKENDS",
     "MIN_GAIN",
+    "DualCertificate",
     "Matcher",
     "MatchingProblem",
     "MatchResult",
     "ProblemSpec",
     "SolveOptions",
+    "certify",
+    "dual_certificate",
     "plan",
     "solve",
     "BipartiteGraph",

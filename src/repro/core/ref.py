@@ -200,7 +200,7 @@ def awac_round_select(dense_val, struct, mate_row, mate_col, min_gain=MIN_GAIN):
            discard winners whose e2-column is itself rooted
       fallback: if all discarded but candidates exist, apply the single global
            best candidate (the paper suggests random augmentations; we use the
-           deterministic best-single-cycle fallback — recorded in DESIGN.md §8)
+           deterministic best-single-cycle fallback — recorded in DESIGN.md §2)
     """
     n = dense_val.shape[0]
     jj = np.arange(n)

@@ -1,0 +1,7 @@
+"""Data pipelines: synthetic generators (graphs/matrices/tokens), real-matrix
+ingestion (``repro.data.mtx``), and the paper's weight metrics
+(``repro.data.weight_transforms``). The matching-side facade is
+``repro.data.matrices``."""
+from repro.data import matrices, mtx, weight_transforms
+
+__all__ = ["matrices", "mtx", "weight_transforms"]

@@ -1,13 +1,25 @@
-"""Matrix pipeline for the matching core: generation + 2D distribution.
-(The generators live in repro.core.graph; this module is the data-pipeline
-facade used by benchmarks/examples.)"""
+"""Matrix pipeline for the matching core: generation, real-matrix ingestion,
+weight metrics, and 2D distribution. (Generators live in repro.core.graph,
+Matrix Market I/O in repro.data.mtx, transforms in
+repro.data.weight_transforms; this module is the data-pipeline facade used
+by benchmarks/examples/experiments.)"""
 from repro.core.graph import SUITE_KINDS, generate, matrix_suite, normalize_rowcol_max
+from repro.data.mtx import CooMatrix, MatrixMarketError, load_problem, read_mtx, write_mtx
+from repro.data.weight_transforms import TRANSFORMS, compose, get_transform
 from repro.sparse.partition import partition_coo_2d
 
 __all__ = [
     "SUITE_KINDS",
+    "TRANSFORMS",
+    "CooMatrix",
+    "MatrixMarketError",
+    "compose",
     "generate",
+    "get_transform",
+    "load_problem",
     "matrix_suite",
     "normalize_rowcol_max",
     "partition_coo_2d",
+    "read_mtx",
+    "write_mtx",
 ]

@@ -1,0 +1,25 @@
+"""Real-matrix evaluation subsystem (DESIGN.md §8): Matrix Market fixtures
++ the synthetic suite, swept across backends and device grids through the
+``solve()``/``Matcher`` facade, with LP-dual certified approximation-ratio
+bounds. CLI entry point: ``experiments/run_paper_eval.py``."""
+from repro.experiments.paper_eval import (
+    DEFAULT_SPEC,
+    QUICK_SPEC,
+    EvalCase,
+    EvalRecord,
+    fixture_cases,
+    run_eval,
+    synthetic_cases,
+    write_outputs,
+)
+
+__all__ = [
+    "DEFAULT_SPEC",
+    "QUICK_SPEC",
+    "EvalCase",
+    "EvalRecord",
+    "fixture_cases",
+    "run_eval",
+    "synthetic_cases",
+    "write_outputs",
+]

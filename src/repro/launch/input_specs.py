@@ -63,7 +63,7 @@ OPT = AdamWConfig()
 
 
 def _lm_policy(cfg, mesh, b: int, rules, variants=()):
-    """Activation-sharding policy for the LM family (DESIGN.md §5)."""
+    """Activation-sharding policy for the LM family (mesh layout: DESIGN.md §1)."""
     bax = mesh_lib.batch_axes(mesh) if b > 1 else None
     kvdiv = (cfg.n_kv_heads * cfg.hd) % mesh.shape["model"] == 0
     ep_ax = rules.get("experts")

@@ -3,7 +3,7 @@
 Node states are irrep features X [N, (l_max+1)^2, C] (l_max=6 -> 49
 components, C channels). Per layer (structure follows the paper; the
 full Wigner rotation into per-edge frames is simplified to global-frame
-SO(2)-restricted mixing, recorded in DESIGN.md §8):
+SO(2)-restricted mixing — a deliberate fidelity trade recorded here):
 
   1. edge invariants: radial basis of |r_ij| + per-degree norms of X_i
   2. multi-head attention weights from invariants (n_heads scalar heads)
@@ -88,8 +88,9 @@ def apply(params, gb: GraphBatch, cfg):
     if cfg.opt("escn_subspace", False):
         # §Perf iteration Q1: carry ONLY the |m| <= m_max components — the
         # eSCN restriction applied to the state itself (the dropped
-        # components never interact under the global-frame simplification,
-        # DESIGN.md §8), shrinking every edge gather/message by K/K_sub.
+        # components never interact under the global-frame simplification
+        # noted in the module docstring), shrinking every edge
+        # gather/message by K/K_sub.
         sel = np.nonzero(np.abs(ms_arr) <= m_max)[0]
         ls_arr, ms_arr = ls_arr[sel], ms_arr[sel]
         k = len(sel)

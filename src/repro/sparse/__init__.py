@@ -18,6 +18,7 @@ from repro.sparse.ops import (
 from repro.sparse.csr import (
     PaddedCSR,
     coo_to_padded_csr,
+    dedupe_coo_sum,
     max_row_nnz,
     row_ptr_from_sorted,
     sort_coo,
@@ -43,6 +44,7 @@ __all__ = [
     "x64_available",
     "PaddedCSR",
     "coo_to_padded_csr",
+    "dedupe_coo_sum",
     "max_row_nnz",
     "row_ptr_from_sorted",
     "sort_coo",

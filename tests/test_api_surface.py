@@ -16,6 +16,7 @@ REPO = pathlib.Path(__file__).resolve().parents[1]
 EXPECTED_EXPORTS = [
     "BACKENDS",
     "BipartiteGraph",
+    "DualCertificate",
     "MIN_GAIN",
     "MatchResult",
     "Matcher",
@@ -24,6 +25,9 @@ EXPECTED_EXPORTS = [
     "SolveOptions",
     "api",
     "batch",
+    "certify",
+    "dual",
+    "dual_certificate",
     "from_coo",
     "generate",
     "graph",

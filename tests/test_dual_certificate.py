@@ -1,0 +1,103 @@
+"""Dual-certificate soundness (repro.core.dual, DESIGN.md §8): the bound
+must never undercut the exact optimum, must be tight exactly when the
+matching is optimal, and the potentials must be feasible by direct check."""
+import numpy as np
+import pytest
+
+from repro.core import MatchingProblem, SolveOptions, graph, ref, solve
+from repro.core.dual import certify, dual_certificate
+
+pytestmark = pytest.mark.skipif(not ref.HAVE_SCIPY,
+                                reason="exact oracle needs scipy")
+
+SUITE = graph.matrix_suite(n_matrices=20, n=48)
+
+
+def _exact(g):
+    dense = g.to_dense().astype(np.float32)
+    struct = g.structure_dense()
+    _, opt = ref.exact_mwpm(dense, struct)
+    return float(opt)
+
+
+@pytest.mark.parametrize("name,g", SUITE, ids=[n for n, _ in SUITE])
+def test_certificate_sound_on_every_suite_instance(name, g):
+    """certified_bound >= exact optimum on EVERY instance, equality (tight)
+    exactly on the instances where the oracle says we hit the optimum."""
+    problem = MatchingProblem.from_graph(g)
+    res = solve(problem)
+    cert = certify(problem, res)
+    opt = _exact(g)
+    scale = max(1.0, abs(opt))
+    assert cert.upper_bound >= opt - 1e-6 * scale, \
+        f"{name}: bound {cert.upper_bound} < optimum {opt}"
+    assert cert.weight <= cert.upper_bound + 1e-6 * scale
+    at_optimum = abs(cert.weight - opt) <= 1e-5 * scale
+    if at_optimum:
+        assert cert.tight, f"{name}: optimal matching but loose certificate"
+        assert cert.upper_bound == pytest.approx(opt, rel=1e-5)
+        assert cert.ratio_bound == 1.0
+    else:
+        assert not cert.tight
+        assert 0.0 < cert.ratio_bound < 1.0
+    # feasibility by direct check: u_i + v_j >= w_ij on every edge
+    row = np.asarray(problem.row)
+    col = np.asarray(problem.col)
+    val = np.asarray(problem.val, np.float64)
+    m = row < problem.n
+    slack = cert.u[row[m]] + cert.v[col[m]] - val[m]
+    assert slack.min() >= -1e-9 * scale
+
+
+def test_suboptimal_matching_still_sound():
+    """Cut AWAC off (max_iter=0): the perfect-but-unrefined matching gets
+    a sound, non-tight certificate whose bound still clears the optimum."""
+    g = graph.generate(48, avg_degree=6.0, kind="antigreedy", seed=3)
+    problem = MatchingProblem.from_graph(g)
+    res0 = solve(problem, SolveOptions(max_iter=0))
+    res = solve(problem)
+    assert bool(np.asarray(res0.perfect))
+    cert0 = certify(problem, res0)
+    opt = _exact(g)
+    assert float(np.asarray(res0.weight)) < float(np.asarray(res.weight))
+    assert cert0.upper_bound >= opt - 1e-6
+    assert not cert0.tight
+    assert cert0.slack > 0
+
+
+def test_batched_certify_matches_per_instance():
+    gs = [graph.generate(24, avg_degree=4.0, kind=k, seed=s)
+          for s, k in enumerate(("uniform", "antigreedy", "circuit"))]
+    batched = MatchingProblem.stack(gs)
+    res = solve(batched)
+    certs = certify(batched, res)
+    assert len(certs) == 3
+    for g, cert in zip(gs, certs):
+        single = MatchingProblem.from_graph(g)
+        alone = certify(single, solve(single))
+        assert cert.upper_bound == pytest.approx(alone.upper_bound)
+        assert cert.tight == alone.tight
+
+
+def test_imperfect_matching_rejected():
+    g = graph.generate(8, avg_degree=3.0, seed=0)
+    problem = MatchingProblem.from_graph(g)
+    with pytest.raises(ValueError, match="PERFECT"):
+        dual_certificate(problem.row, problem.col, problem.val, problem.n,
+                         np.full(8, 8))
+
+
+def test_matching_off_the_edge_list_rejected():
+    row = np.array([0, 1])
+    col = np.array([0, 1])
+    val = np.array([1.0, 1.0])
+    with pytest.raises(ValueError, match="not in the edge list"):
+        dual_certificate(row, col, val, 2, np.array([1, 0]))
+
+
+def test_row_matched_twice_rejected():
+    row = np.array([0, 0, 1])
+    col = np.array([0, 1, 0])
+    val = np.array([1.0, 1.0, 1.0])
+    with pytest.raises(ValueError, match="twice"):
+        dual_certificate(row, col, val, 2, np.array([0, 0]))

@@ -1,0 +1,206 @@
+"""Matrix Market ingestion (repro.data.mtx, DESIGN.md §8): round-trips are
+bit-equal, symmetric storage expands correctly, malformed files fail with
+located errors, and load_problem lands in the canonical MatchingProblem."""
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.api import MatchingProblem
+from repro.data.mtx import MatrixMarketError, load_problem, read_mtx, write_mtx
+
+DATA = pathlib.Path(__file__).parent / "data"
+FIXTURES = sorted(DATA.glob("*.mtx"))
+
+
+# --------------------------------------------------------------------------
+# read -> write -> read round trip
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("path", FIXTURES, ids=lambda p: p.stem)
+def test_roundtrip_bit_equal(path, tmp_path):
+    a = read_mtx(path, expand_symmetry=False)
+    out = tmp_path / path.name
+    write_mtx(out, a.row, a.col, None if a.field == "pattern" else a.val,
+              shape=(a.nrows, a.ncols), field=a.field, symmetry=a.symmetry)
+    b = read_mtx(out, expand_symmetry=False)
+    assert (b.nrows, b.ncols, b.field, b.symmetry) == \
+        (a.nrows, a.ncols, a.field, a.symmetry)
+    assert np.array_equal(a.row, b.row)
+    assert np.array_equal(a.col, b.col)
+    # bit-equal: compare the raw float64 payloads, not approximately
+    assert a.val.tobytes() == b.val.tobytes()
+
+
+def test_roundtrip_exotic_values(tmp_path):
+    # shortest-repr writing must round-trip values that decimal formatting
+    # with a fixed precision would mangle
+    row = np.arange(5)
+    col = np.arange(5)
+    val = np.array([0.1, 1e-300, 1.7976931348623157e308, -3.141592653589793,
+                    2.0 ** -52])
+    out = tmp_path / "exotic.mtx"
+    write_mtx(out, row, col, val, shape=(5, 5))
+    b = read_mtx(out)
+    assert b.val.tobytes() == val.tobytes()
+
+
+# --------------------------------------------------------------------------
+# symmetry expansion
+# --------------------------------------------------------------------------
+
+
+def test_symmetric_expansion():
+    stored = read_mtx(DATA / "bands6_sym.mtx", expand_symmetry=False)
+    full = read_mtx(DATA / "bands6_sym.mtx", expand_symmetry=True)
+    n_diag = int((stored.row == stored.col).sum())
+    assert not stored.expanded and full.expanded
+    assert full.nnz == 2 * stored.nnz - n_diag
+    # every off-diagonal entry has its mirror with the same value
+    d = {(int(i), int(j)): v for i, j, v in zip(full.row, full.col, full.val)}
+    for i, j, v in zip(stored.row, stored.col, stored.val):
+        assert d[(int(j), int(i))] == v
+
+
+def test_skew_symmetric_expansion(tmp_path):
+    out = tmp_path / "skew.mtx"
+    write_mtx(out, [1, 2], [0, 0], [2.5, -0.75], shape=(3, 3),
+              symmetry="skew-symmetric")
+    m = read_mtx(out)
+    d = {(int(i), int(j)): v for i, j, v in zip(m.row, m.col, m.val)}
+    assert d[(0, 1)] == -2.5 and d[(0, 2)] == 0.75
+
+
+def test_skew_symmetric_diagonal_rejected(tmp_path):
+    out = tmp_path / "bad_skew.mtx"
+    out.write_text("%%MatrixMarket matrix coordinate real skew-symmetric\n"
+                   "2 2 1\n1 1 3.0\n")
+    with pytest.raises(MatrixMarketError, match="diagonal"):
+        read_mtx(out)
+
+
+def test_symmetric_mixed_triangles_rejected(tmp_path):
+    # storing BOTH triangles would double every mirrored weight after
+    # expansion + duplicate assembly — must be a located error, not
+    # silent corruption
+    out = tmp_path / "mixed.mtx"
+    out.write_text("%%MatrixMarket matrix coordinate real symmetric\n"
+                   "2 2 3\n1 1 1.0\n2 1 5.0\n1 2 5.0\n")
+    with pytest.raises(MatrixMarketError, match="ONE triangle"):
+        read_mtx(out)
+    with pytest.raises(MatrixMarketError, match="ONE triangle"):
+        write_mtx(tmp_path / "w.mtx", [1, 0], [0, 1], [5.0, 5.0],
+                  shape=(2, 2), symmetry="symmetric")
+    # either single triangle alone stays accepted
+    for rows, cols in ([(2,), (1,)], [(1,), (2,)]):
+        out.write_text("%%MatrixMarket matrix coordinate real symmetric\n"
+                       f"2 2 1\n{rows[0]} {cols[0]} 5.0\n")
+        assert read_mtx(out).nnz == 2
+
+
+def test_pattern_reads_unit_weights():
+    m = read_mtx(DATA / "mesh5_pat.mtx")
+    assert m.field == "pattern"
+    assert np.array_equal(m.val, np.ones(m.nnz))
+
+
+def test_integer_field_exact():
+    m = read_mtx(DATA / "count4_int.mtx")
+    assert m.field == "integer"
+    assert np.array_equal(m.val, np.trunc(m.val))
+    assert -3.0 in m.val.tolist()
+
+
+# --------------------------------------------------------------------------
+# malformed input: every error names the file and line
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("content,match", [
+    ("", "empty file"),
+    ("%%NotMatrixMarket matrix coordinate real general\n1 1 0\n", "banner"),
+    ("%%MatrixMarket matrix array real general\n1 1\n0.5\n", "coordinate"),
+    ("%%MatrixMarket tensor coordinate real general\n1 1 0\n", "object"),
+    ("%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 2.0 0.0\n",
+     "field 'complex'|unsupported field"),
+    ("%%MatrixMarket matrix coordinate real hermitian\n1 1 1\n1 1 2.0\n",
+     "symmetry"),
+    ("%%MatrixMarket matrix coordinate real general\nnot a size line\n",
+     "size line"),
+    ("%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n",
+     "declared 2 entries but found 1"),
+    ("%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 1.0\n"
+     "2 2 1.0\n", "more than the declared"),
+    ("%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n",
+     "outside the declared"),
+    ("%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1.0\n",
+     "1-based"),
+    ("%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 abc\n",
+     "bad 'real' entry"),
+    ("%%MatrixMarket matrix coordinate pattern general\n2 2 1\n1 1 1.0\n",
+     "expected 2 tokens"),
+    ("%%MatrixMarket matrix coordinate real symmetric\n2 3 1\n1 1 1.0\n",
+     "square"),
+])
+def test_malformed_rejected(tmp_path, content, match):
+    out = tmp_path / "bad.mtx"
+    out.write_text(content)
+    with pytest.raises(MatrixMarketError, match=match):
+        read_mtx(out)
+    assert True  # errors must be MatrixMarketError, never bare crashes
+
+
+def test_error_names_file_and_line(tmp_path):
+    out = tmp_path / "where.mtx"
+    out.write_text("%%MatrixMarket matrix coordinate real general\n"
+                   "% comment\n2 2 1\n9 9 1.0\n")
+    with pytest.raises(MatrixMarketError, match=r"where\.mtx:4"):
+        read_mtx(out)
+
+
+# --------------------------------------------------------------------------
+# load_problem: the ingestion pipeline into MatchingProblem
+# --------------------------------------------------------------------------
+
+
+def test_load_problem_canonical():
+    problem, coo = load_problem(DATA / "circuit8.mtx", transform="abs")
+    assert isinstance(problem, MatchingProblem)
+    assert problem.n == coo.nrows == 8
+    row = np.asarray(problem.row)
+    col = np.asarray(problem.col)
+    m = row < problem.n
+    # repo-wide convention: lex-sorted, padded with (n, n, 0)
+    key = row.astype(np.int64) * 64 + col
+    assert np.array_equal(key, np.sort(key))
+    assert np.array_equal(row[~m], np.full((~m).sum(), 8))
+    assert np.asarray(problem.val)[~m].sum() == 0
+
+
+def test_load_problem_sums_duplicates(tmp_path):
+    out = tmp_path / "dup.mtx"
+    out.write_text("%%MatrixMarket matrix coordinate real general\n"
+                   "2 2 4\n1 1 1.5\n1 1 2.0\n2 2 1.0\n2 1 0.25\n")
+    problem, _ = load_problem(out, transform=None)
+    row = np.asarray(problem.row)
+    val = np.asarray(problem.val)
+    assert val[(row == 0)][0] == pytest.approx(3.5)  # 1.5 + 2.0 assembled
+
+
+def test_load_problem_drops_zeros_and_cancellations(tmp_path):
+    out = tmp_path / "zeros.mtx"
+    out.write_text("%%MatrixMarket matrix coordinate real general\n"
+                   "2 2 5\n1 1 1.0\n1 2 0.0\n2 1 4.0\n2 2 -4.0\n2 2 4.0\n")
+    problem, _ = load_problem(out, transform=None)
+    row = np.asarray(problem.row)
+    nnz = int((row < problem.n).sum())
+    assert nnz == 2  # explicit zero and the cancelled (2,2) pair are gone
+
+
+def test_load_problem_requires_square(tmp_path):
+    out = tmp_path / "rect.mtx"
+    out.write_text("%%MatrixMarket matrix coordinate real general\n"
+                   "2 3 1\n1 1 1.0\n")
+    with pytest.raises(MatrixMarketError, match="square"):
+        load_problem(out)

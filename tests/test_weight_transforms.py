@@ -1,0 +1,92 @@
+"""Weight transforms (repro.data.weight_transforms, DESIGN.md §8): the MC64
+log2-scaled metric vs a hand-computed oracle, the decision-invariance of
+the non-negative lift, and the composition plumbing."""
+import numpy as np
+import pytest
+
+from repro.core import SolveOptions, solve
+from repro.data.mtx import load_problem
+from repro.data.weight_transforms import (
+    compose,
+    get_transform,
+    log2_scaled,
+    log2_scaled_nonneg,
+    mc64_cost,
+    rowcol_normalized,
+)
+
+# 3x3 oracle:  A = [[4, 1, .], [2, 8, 1], [., 2, 16]]
+# column maxes 4, 8, 16 -> w_ij = log2|a_ij| - log2(colmax):
+#   (0,0): 0   (1,0): -1   (0,1): -3   (1,1): 0   (2,1): -2
+#   (1,2): -4  (2,2): 0
+ROW = np.array([0, 1, 0, 1, 2, 1, 2])
+COL = np.array([0, 0, 1, 1, 1, 2, 2])
+VAL = np.array([4.0, 2.0, 1.0, 8.0, 2.0, 1.0, 16.0])
+EXPECTED = np.array([0.0, -1.0, -3.0, 0.0, -2.0, -4.0, 0.0])
+
+
+def test_log2_scaled_hand_oracle():
+    w = log2_scaled(ROW, COL, VAL, 3)
+    assert np.array_equal(w, EXPECTED)
+    # the per-column max is exactly 0 (the MC64 optimality anchor)
+    for j in range(3):
+        assert w[COL == j].max() == 0.0
+
+
+def test_log2_scaled_handles_signs():
+    # the metric sees |a_ij|: flipping signs changes nothing
+    w = log2_scaled(ROW, COL, -VAL, 3)
+    assert np.array_equal(w, EXPECTED)
+
+
+def test_mc64_cost_is_negated_weight():
+    assert np.array_equal(mc64_cost(ROW, COL, VAL, 3),
+                          -log2_scaled(ROW, COL, VAL, 3))
+
+
+def test_nonneg_lift_is_constant_shift():
+    w = log2_scaled(ROW, COL, VAL, 3)
+    wn = log2_scaled_nonneg(ROW, COL, VAL, 3)
+    assert wn.min() == 0.0
+    shift = wn - w
+    assert np.allclose(shift, shift[0])  # one global constant
+
+
+def test_zero_entries_rejected():
+    with pytest.raises(ValueError, match="zero entries"):
+        log2_scaled(ROW, COL, np.array([4.0, 0.0, 1, 8, 2, 1, 16]), 3)
+
+
+def test_rowcol_normalized_bounds():
+    v = rowcol_normalized(ROW, COL, VAL, 3)
+    assert v.max() <= 1.0 and v.min() > 0.0
+
+
+def test_compose_order():
+    t = compose("abs", lambda r, c, v, n: v * 2.0)
+    assert np.array_equal(t(ROW, COL, -VAL, 3), 2.0 * VAL)
+
+
+def test_get_transform_errors():
+    with pytest.raises(KeyError, match="unknown weight transform"):
+        get_transform("nope")
+    with pytest.raises(TypeError):
+        get_transform(42)
+    assert get_transform(log2_scaled) is log2_scaled
+    assert get_transform(["abs"])(ROW, COL, -VAL, 3).min() > 0
+
+
+def test_nonneg_lift_is_decision_invariant(tmp_path):
+    """Every 4-cycle gain and every argmax the engine takes is invariant
+    under a constant per-edge shift, so the raw (<= 0) and lifted metrics
+    must produce bit-identical matchings — on every backend."""
+    p_raw, _ = load_problem("tests/data/circuit8.mtx",
+                            transform="log2_scaled")
+    p_lift, _ = load_problem("tests/data/circuit8.mtx",
+                             transform="log2_scaled_nonneg")
+    for backend in ("reference", "xla"):
+        r_raw = solve(p_raw, SolveOptions(backend=backend))
+        r_lift = solve(p_lift, SolveOptions(backend=backend))
+        assert np.array_equal(np.asarray(r_raw.mate_row),
+                              np.asarray(r_lift.mate_row)), backend
+        assert int(r_raw.awac_iters) == int(r_lift.awac_iters)
