@@ -33,6 +33,7 @@ DIST_CHILD = r"""
 import time
 import numpy as np, jax
 from repro.core import MatchingProblem, SolveOptions, graph, plan, solve
+from repro.runtime.straggler import StragglerMonitor
 
 p, pr, pc, n, deg = {p}, {pr}, {pc}, {n}, {deg}
 mesh = jax.sharding.Mesh(
@@ -49,12 +50,19 @@ for b in (1, 8, 32):
     matcher = plan(problem, SolveOptions(grid=mesh, backend=backend))
     res = matcher(problem)  # compile + warmup
     jax.block_until_ready(res)
-    reps = 3
+    # straggler monitor over the serving loop: each dispatch is one "step"
+    # on serving rank 0 (simulated meshes share one host, so the cross-rank
+    # z-score path is idle — slow_steps() is the single-rank alarm)
+    mon = StragglerMonitor(alpha=0.2, threshold=2.0, warmup=5)
+    reps = 6
     t0 = time.perf_counter()
-    for _ in range(reps):
+    for step in range(reps):
+        ts = time.perf_counter()
         out = matcher(problem)
         jax.block_until_ready(out)
+        mon.record(step, time.perf_counter() - ts, rank=0)
     dt = (time.perf_counter() - t0) / reps
+    slow = mon.slow_ranks() or mon.slow_steps()
     resL = solve(problem)
     ident = bool(np.array_equal(np.array(resL.mate_row),
                                 np.array(res.mate_row)))
@@ -64,7 +72,8 @@ for b in (1, 8, 32):
     # regimes are not comparable under one name without this flag.
     print(f"ROW,awpm_dist_batched_p{{p}}_B{{b}},{{dt / b * 1e6:.1f}},"
           f"matchings_per_s={{b / dt:.1f}};mesh={{pr}}x{{pc}};"
-          f"backend={{backend}};timed=serving;identical_to_local={{ident}}",
+          f"backend={{backend}};timed=serving;identical_to_local={{ident}};"
+          f"straggler_flagged={{'|'.join(map(str, slow)) or 'none'}}",
           flush=True)
 """
 

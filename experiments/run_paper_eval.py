@@ -89,7 +89,7 @@ def main() -> None:
     wall = time.perf_counter() - t0
     print(paper_eval.to_markdown(records))
     n_tight = sum(r.tight for r in records)
-    bounds = [r.ratio_bound for r in records if r.ratio_bound == r.ratio_bound]
+    bounds = [r.ratio_bound for r in records if r.ratio_bound is not None]
     print(f"# {len(records)} rows in {wall:.1f}s: {n_tight} certified "
           f"optimal, min certified ratio bound "
           f"{min(bounds):.4f}" if bounds else "# no ratio bounds", flush=True)

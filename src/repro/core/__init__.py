@@ -7,9 +7,10 @@ compile-once/run-many :class:`Matcher`). The pre-facade entry points
 (``single.awpm`` / ``batch.awpm_batched`` / ``dist.awpm_dist_batched`` and
 the ``Dist*`` driver zoo) remain as bit-identical deprecation shims.
 """
-from repro.core import api, batch, dual, graph, pivot, ref, single
+from repro.core import api, batch, dual, graph, pivot, preflight, ref, single
 from repro.core.api import (
     BACKENDS,
+    ON_INVALID,
     Matcher,
     MatchingProblem,
     MatchResult,
@@ -21,6 +22,11 @@ from repro.core.api import (
 from repro.core.constants import MIN_GAIN
 from repro.core.dual import DualCertificate, certify, dual_certificate
 from repro.core.graph import BipartiteGraph, from_coo, generate, matrix_suite
+from repro.core.preflight import (
+    InfeasibleProblemError,
+    PreflightError,
+    PreflightReport,
+)
 
 __all__ = [
     "api",
@@ -28,14 +34,19 @@ __all__ = [
     "dual",
     "graph",
     "pivot",
+    "preflight",
     "ref",
     "single",
     "BACKENDS",
     "MIN_GAIN",
+    "ON_INVALID",
     "DualCertificate",
+    "InfeasibleProblemError",
     "Matcher",
     "MatchingProblem",
     "MatchResult",
+    "PreflightError",
+    "PreflightReport",
     "ProblemSpec",
     "SolveOptions",
     "certify",

@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.core import batch as _batch
 from repro.core import graph as _graph
+from repro.core import preflight as _preflight
 from repro.core import single as _single
 from repro.core.constants import MIN_GAIN
 from repro.core.single import MatchState
@@ -64,9 +65,13 @@ from repro.sparse.csr import window_depth
 #: with a grid require the 1x1 grid (the block is the whole instance).
 BACKENDS = ("auto", "reference", "xla", "pallas", "fused")
 
+#: ``SolveOptions.on_invalid`` policies (see ``core.preflight``).
+ON_INVALID = ("raise", "sanitize", "degrade")
+
 __all__ = [
     "BACKENDS",
     "MIN_GAIN",
+    "ON_INVALID",
     "MatchResult",
     "Matcher",
     "MatchingProblem",
@@ -269,6 +274,20 @@ class SolveOptions:
     a2a_caps      distributed bucket capacities for the two exchange stages
                   (None = provably drop-free ``safe_a2a_caps``).
     packed        pack the distributed exchanges into one collective each.
+    on_invalid    policy for degenerate input (``core.preflight``):
+                  "raise" rejects fatal issues (non-finite weights,
+                  duplicate edges) and infeasible instances with a typed
+                  error; "sanitize" repairs the data (drop non-finite
+                  edges, merge duplicates keep-max) but still raises on
+                  infeasibility; "degrade" additionally returns the maximal
+                  imperfect matching (``perfect=False``) with the diagnosis
+                  attached instead of raising. All three short-circuit AWAC
+                  on infeasible instances (a 4-cycle rotation can never
+                  raise cardinality, so the budget would be pure waste).
+    exchange_check  distributed-only: conserve-count + checksum accounting
+                  across the two-stage exchange each AWAC round; any
+                  drop/duplicate/corruption raises
+                  ``core.dist.ExchangeIntegrityError``.
     """
 
     max_iter: int = 1000
@@ -279,12 +298,18 @@ class SolveOptions:
     cap: int | None = None
     a2a_caps: tuple[int, int] | None = None
     packed: bool = False
+    on_invalid: str = "raise"
+    exchange_check: bool = False
 
     def __post_init__(self):
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"unknown backend {self.backend!r}: expected one of "
                 f"{BACKENDS}")
+        if self.on_invalid not in ON_INVALID:
+            raise ValueError(
+                f"unknown on_invalid policy {self.on_invalid!r}: expected "
+                f"one of {ON_INVALID}")
         object.__setattr__(
             self, "max_iter",
             _as_int("max_iter must be a non-negative int", self.max_iter,
@@ -337,6 +362,10 @@ class SolveOptions:
                 raise ValueError(
                     "packed is a distributed exchange knob and requires "
                     "SolveOptions.grid")
+            if self.exchange_check:
+                raise ValueError(
+                    "exchange_check audits the distributed two-stage "
+                    "exchange and requires SolveOptions.grid")
 
     def _dist_backend(self) -> str:
         return "fused" if self.backend == "auto" else self.backend
@@ -355,6 +384,11 @@ class MatchResult:
     Single instance: ``mate_row``/``mate_col`` are [n + 1] (sentinel slot n;
     ``mate_row[j]`` = row matched to column j), ``weight``/``awac_iters``/
     ``perfect`` scalars. Batched: leading B on everything.
+
+    ``diagnosis`` is a ``core.preflight.PreflightReport`` (or None) when
+    preflight found issues worth surfacing — always present on a degraded
+    (``perfect=False``) result, never on a clean solve. It rides as pytree
+    aux_data (static), so it is None for results built under a trace.
     """
 
     mate_row: Any  # [n+1] or [B, n+1] int32; sentinel n = unmatched
@@ -362,14 +396,15 @@ class MatchResult:
     weight: Any  # matched-edge weight sum, f32
     awac_iters: Any  # AWAC rounds until convergence, i32
     perfect: Any  # bool: every column matched
+    diagnosis: Any = None  # PreflightReport | None (static, host-side only)
 
     def tree_flatten(self):
         return (self.mate_row, self.mate_col, self.weight, self.awac_iters,
-                self.perfect), None
+                self.perfect), self.diagnosis
 
     @classmethod
-    def tree_unflatten(cls, _, leaves):
-        return cls(*leaves)
+    def tree_unflatten(cls, diagnosis, leaves):
+        return cls(*leaves, diagnosis=diagnosis)
 
 
 def _result(state: MatchState, iters, n: int, batched: bool) -> MatchResult:
@@ -398,6 +433,59 @@ def _check_types(problem, options):
             f"options must be SolveOptions, got {type(options).__name__}")
 
 
+def _is_traced(problem: MatchingProblem) -> bool:
+    return any(isinstance(x, jax.core.Tracer)
+               for x in (problem.row, problem.col, problem.val))
+
+
+def _apply_preflight(problem: MatchingProblem, options: SolveOptions):
+    """Host-side input screening per ``options.on_invalid``. Returns the
+    (possibly sanitized) problem and the report to carry into
+    :func:`_finish` — or (problem, None) under a trace, where host
+    inspection is impossible (the in-engine AWAC short-circuit still
+    protects infeasible instances from burning the round budget)."""
+    if _is_traced(problem):
+        return problem, None
+    report = _preflight.preflight(problem)
+    if report.fatal:
+        if options.on_invalid == "raise":
+            raise _preflight.PreflightError(
+                report,
+                f"preflight rejected the problem: {report.summary()}. Pass "
+                f"SolveOptions(on_invalid='sanitize') to repair, or "
+                f"'degrade' to also accept infeasible instances.")
+        problem, report = _preflight.sanitize(problem)
+    if report.structural and options.on_invalid == "raise":
+        # empty rows/columns make a perfect matching impossible — under the
+        # strict policy that is an error, and it is known before solving
+        raise _preflight.InfeasibleProblemError(
+            report,
+            f"problem has no perfect matching: {report.summary()}. Pass "
+            f"SolveOptions(on_invalid='degrade') for the maximal matching.")
+    return problem, report
+
+
+def _finish(problem: MatchingProblem, result: MatchResult,
+            options: SolveOptions, report) -> MatchResult:
+    """Post-solve policy: attach the preflight diagnosis, and on an
+    imperfect result either raise (raise/sanitize policies) or return the
+    degraded matching with the deficiency folded into the diagnosis."""
+    if isinstance(result.perfect, jax.core.Tracer):
+        return result
+    if bool(np.asarray(result.perfect).all()):
+        if report is not None and report.issues:
+            return dataclasses.replace(result, diagnosis=report)
+        return result
+    report = _preflight.deficiency_from_mates(
+        result.mate_row, problem.n, report, batched=problem.is_batched)
+    if options.on_invalid != "degrade":
+        raise _preflight.InfeasibleProblemError(
+            report,
+            f"problem has no perfect matching: {report.summary()}. Pass "
+            f"SolveOptions(on_invalid='degrade') for the maximal matching.")
+    return dataclasses.replace(result, diagnosis=report)
+
+
 def solve(problem: MatchingProblem,
           options: SolveOptions | None = None) -> MatchResult:
     """Run the full AWPM pipeline (greedy maximal -> MCM -> AWAC) on
@@ -406,19 +494,24 @@ def solve(problem: MatchingProblem,
     per instance on every route and backend."""
     options = SolveOptions() if options is None else options
     _check_types(problem, options)
+    problem, report = _apply_preflight(problem, options)
     if options.grid is not None:
-        return _solve_dist(problem, options)
-    if problem.is_batched:
+        result = _solve_dist(problem, options)
+    elif problem.is_batched:
         state, iters = _batch._awpm_batched(
             problem.row, problem.col, problem.val, problem.n,
             max_iter=options.max_iter, min_gain=options.min_gain,
-            backend=options.backend, window_steps=options.window_steps)
-        return _result(state, iters, problem.n, batched=True)
-    state, iters = _single._awpm(
-        problem.row, problem.col, problem.val, problem.n,
-        max_iter=options.max_iter, min_gain=options.min_gain,
-        backend=options.backend, window_steps=options.window_steps)
-    return _result(state, iters, problem.n, batched=False)
+            backend=options.backend, window_steps=options.window_steps,
+            degrade_infeasible=True)
+        result = _result(state, iters, problem.n, batched=True)
+    else:
+        state, iters = _single._awpm(
+            problem.row, problem.col, problem.val, problem.n,
+            max_iter=options.max_iter, min_gain=options.min_gain,
+            backend=options.backend, window_steps=options.window_steps,
+            degrade_infeasible=True)
+        result = _result(state, iters, problem.n, batched=False)
+    return _finish(problem, result, options, report)
 
 
 def _solve_dist(problem: MatchingProblem, options: SolveOptions,
@@ -446,14 +539,28 @@ def _solve_dist(problem: MatchingProblem, options: SolveOptions,
             a2a_caps=options.a2a_caps, max_iter=options.max_iter,
             min_gain=options.min_gain, packed=options.packed,
             backend=options._dist_backend(),
-            window_steps=options.window_steps)
-    state, iters, dropped = driver.run(row, col, val)
+            window_steps=options.window_steps,
+            degrade_infeasible=True,
+            exchange_check=options.exchange_check)
+    state, iters, aux = driver.run(row, col, val)
+    aux = np.asarray(aux)
+    # with exchange_check the engine psums a [dropped, integrity] pair per
+    # run; otherwise aux is the plain global dropped counter
+    dropped = int(aux[0]) if aux.ndim else int(aux)
+    integrity = int(aux[1]) if aux.ndim else 0
+    if integrity != 0:
+        raise _dist.ExchangeIntegrityError(
+            f"exchange integrity check failed on {integrity} AWAC round(s): "
+            f"payloads received across the two-stage all_to_all do not "
+            f"match what was sent (count or checksum mismatch). The "
+            f"exchange lost, duplicated, or corrupted data; the result "
+            f"cannot be trusted.")
     # only user-overridden a2a_caps can drop (the safe_a2a_caps default is
     # provably drop-free); a drop breaks the bit-identity contract, so it
     # is an error here, never a silent degradation
-    if int(dropped) != 0:
-        raise RuntimeError(
-            f"{int(dropped)} exchange requests were dropped by the "
+    if dropped != 0:
+        raise _dist.ExchangeIntegrityError(
+            f"{dropped} exchange requests were dropped by the "
             f"user-supplied a2a_caps={options.a2a_caps}: the result would "
             f"not be bit-identical to the local engines. Raise the bucket "
             f"capacities or leave a2a_caps=None for the drop-free default.")
@@ -527,7 +634,8 @@ class Matcher:
             grid, n, cap=self.block_cap, a2a_caps=self.a2a_caps,
             max_iter=options.max_iter, min_gain=options.min_gain,
             packed=options.packed, backend=options._dist_backend(),
-            window_steps=self._window_steps)
+            window_steps=self._window_steps,
+            degrade_infeasible=True, exchange_check=options.exchange_check)
         # materialize the block-level engine now (plan-time, not per call;
         # the XLA compile itself still lands on the first call); the call
         # form mirrors _DistBatchedAWPM.run exactly so the lru_cache key
@@ -536,7 +644,8 @@ class Matcher:
             grid, n, problem_spec.batch or 1, self.block_cap, self.a2a_caps,
             options.max_iter, options.min_gain, packed=options.packed,
             backend=options._dist_backend(), window_steps=self._window_steps,
-            from_state=False)
+            from_state=False, degrade_infeasible=True,
+            exchange_check=options.exchange_check)
 
     def _check(self, problem: MatchingProblem):
         spec = self.problem_spec
@@ -559,8 +668,10 @@ class Matcher:
         self._check(problem)
         opts = self.options
         if self._driver is not None:
+            problem, report = _apply_preflight(problem, opts)
             try:
-                return _solve_dist(problem, opts, driver=self._driver)
+                result = _solve_dist(problem, opts, driver=self._driver)
+                return _finish(problem, result, opts, report)
             except ValueError as e:
                 if "refusing to truncate" not in str(e):
                     raise

@@ -459,15 +459,27 @@ def _cwinners_batched(backend, row, col, val, row_ptr, n, state, min_gain,
     raise ValueError(f"unknown AWAC backend {backend!r}")
 
 
+# Trace-time convergence-mask hook for the chaos harness
+# (``runtime.chaos``): when set, called as ``tap(active, iters) -> active``
+# after each round's convergence update. None in production — the branch
+# below folds away entirely at trace time.
+_CONVERGENCE_TAP = None
+
+
 def awac_loop(n: int, state: MatchState, max_iter: int, min_gain,
-              cwinners_fn):
+              cwinners_fn, active0=None, aux0=None):
     """Masked batched AWAC loop. ``cwinners_fn(state) -> (Cgain, Ci, Cw1,
     Cw2, aux)`` supplies each round's Step A+B+C winners plus an int32
-    scalar accumulated across rounds (0 for the local backends; the
-    dropped-candidate count for the distributed engine's bucketed
-    exchanges). Step D + augmentation is the vmapped
-    ``single.select_and_augment`` — shared verbatim with every other
-    engine. Returns (state, iters [B], aux)."""
+    value accumulated across rounds (scalar 0 for the local backends; the
+    dropped-candidate count — or the [dropped, integrity] pair under
+    exchange checking — for the distributed engine's bucketed exchanges).
+    Step D + augmentation is the vmapped ``single.select_and_augment`` —
+    shared verbatim with every other engine.
+
+    ``active0`` ([B] bool) masks instances out of the loop from round 0
+    (the infeasible-instance short-circuit: an imperfect matching can never
+    become perfect through 4-cycle rotations). ``aux0`` overrides the aux
+    accumulator's initial value/shape. Returns (state, iters [B], aux)."""
     b = state.mate_row.shape[0]
     select = jax.vmap(
         lambda Cg, Ci, Cw1, Cw2, mr, mc, u, v: single.select_and_augment(
@@ -483,32 +495,40 @@ def awac_loop(n: int, state: MatchState, max_iter: int, min_gain,
             *(jnp.where(keep, ns, s) for ns, s in zip(new_state, state)))
         iters = iters + active.astype(jnp.int32)
         active = active & (n_surv > 0) & (iters < max_iter)
+        if _CONVERGENCE_TAP is not None:
+            active = _CONVERGENCE_TAP(active, iters)
         return state, iters, active, aux + a
 
     def cond(carry):
         return carry[2].any()
 
+    # max_iter <= 0 admits no iterations, matching single._awac_loop
+    go0 = jnp.full((b,), max_iter > 0)
+    if active0 is not None:
+        go0 = go0 & active0
     state, iters, _, aux = jax.lax.while_loop(
         cond, body,
-        # max_iter <= 0 admits no iterations, matching single._awac_loop
-        (state, jnp.zeros((b,), jnp.int32), jnp.full((b,), max_iter > 0),
-         jnp.array(0, jnp.int32)),
+        (state, jnp.zeros((b,), jnp.int32), go0,
+         jnp.array(0, jnp.int32) if aux0 is None else aux0),
     )
     return state, iters, aux
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n", "max_iter", "backend", "window_steps")
+    jax.jit, static_argnames=("n", "max_iter", "backend", "window_steps",
+                              "degrade_infeasible")
 )
 def _awac_loop_batched(row, col, val, row_ptr, n: int, state: MatchState,
                        max_iter: int, min_gain, backend: str,
-                       window_steps: int):
+                       window_steps: int, degrade_infeasible: bool = False):
     def cwinners(st):
         out = _cwinners_batched(backend, row, col, val, row_ptr, n, st,
                                 min_gain, window_steps)
         return (*out, jnp.array(0, jnp.int32))
 
-    state, iters, _ = awac_loop(n, state, max_iter, min_gain, cwinners)
+    active0 = is_perfect_batched(state, n) if degrade_infeasible else None
+    state, iters, _ = awac_loop(n, state, max_iter, min_gain, cwinners,
+                                active0=active0)
     return state, iters
 
 
@@ -522,7 +542,8 @@ def _resolve_window_steps_batched(row, n, window_steps):
 def awac_batched(row, col, val, n: int, state: MatchState,
                  max_iter: int = 1000, min_gain: float = MIN_GAIN,
                  backend: str = "auto", row_ptr=None,
-                 window_steps: int | None = None):
+                 window_steps: int | None = None,
+                 degrade_infeasible: bool = False):
     """Batched AWAC loop over [B, cap] instances. Returns (state, iters [B]).
 
     Same backend contract as ``single.awac``; every instance's result and
@@ -538,9 +559,10 @@ def awac_batched(row, col, val, n: int, state: MatchState,
         with single._x64_scope(row):
             return _awac_loop_batched(row, col, val, row_ptr, n, state,
                                       max_iter, min_gain, backend,
-                                      window_steps)
+                                      window_steps, degrade_infeasible)
     return _awac_loop_batched(row, col, val, row_ptr, n, state, max_iter,
-                              min_gain, backend, window_steps)
+                              min_gain, backend, window_steps,
+                              degrade_infeasible)
 
 
 def awpm_batched(row, col, val, n: int, max_iter: int = 1000,
@@ -556,7 +578,8 @@ def awpm_batched(row, col, val, n: int, max_iter: int = 1000,
 
 def _awpm_batched(row, col, val, n: int, max_iter: int = 1000,
                   min_gain: float = MIN_GAIN, backend: str = "auto",
-                  row_ptr=None, window_steps: int | None = None):
+                  row_ptr=None, window_steps: int | None = None,
+                  degrade_infeasible: bool = False):
     """Full batched pipeline: greedy maximal -> MCM -> AWAC for B instances
     in three dispatches total. row/col/val are [B, cap] padded lex-sorted COO
     sharing n (see ``stack_graphs``). Returns (MatchState with [B, n + 1]
@@ -574,4 +597,5 @@ def _awpm_batched(row, col, val, n: int, max_iter: int = 1000,
                                        mate_col, window_steps)
     return awac_batched(row, col, val, n, state, max_iter=max_iter,
                         min_gain=min_gain, backend=backend, row_ptr=row_ptr,
-                        window_steps=window_steps)
+                        window_steps=window_steps,
+                        degrade_infeasible=degrade_infeasible)

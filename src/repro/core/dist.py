@@ -557,6 +557,43 @@ def default_caps(n: int, m: int, pr: int, pc: int, slack: float = 2.0):
 # --------------------------------------------------------------------------
 
 
+class ExchangeIntegrityError(RuntimeError):
+    """The two-stage bucketed exchange lost, duplicated, or corrupted
+    payloads: the result would not be bit-identical to the local engines.
+    Raised by ``api._solve_dist`` on a non-zero dropped counter (undersized
+    user a2a_caps) or a failed ``SolveOptions(exchange_check=True)``
+    conservation audit."""
+
+
+# Trace-time exchange hook for the chaos harness (``runtime.chaos``): when
+# set, called as ``tap(axis_name, outs, valid) -> (outs, valid)`` on every
+# batched exchange's received buffers (axis_name distinguishes the two
+# routing stages). None in production — the branch folds away at trace time.
+_EXCHANGE_TAP = None
+
+
+def _tapped(axis_name, outs, valid):
+    if _EXCHANGE_TAP is None:
+        return outs, valid
+    return _EXCHANGE_TAP(axis_name, outs, valid)
+
+
+def _conserved(arrays, valid):
+    """Order-independent conservation signature of an exchange payload:
+    (count of valid entries, int32-wraparound checksum of the valid
+    payloads' raw bits). The two-stage exchange is a pure routing of
+    (i, j, w) triples, so both quantities are conserved end-to-end when
+    nothing is dropped — any drop/duplicate changes the count, any
+    corruption (including injected NaNs) changes the checksum."""
+    cnt = valid.astype(jnp.int32).sum().astype(jnp.int32)
+    chk = jnp.zeros((), jnp.int32)
+    for a in arrays:
+        bits = a if a.dtype == jnp.int32 \
+            else jax.lax.bitcast_convert_type(a, jnp.int32)
+        chk = chk + jnp.where(valid, bits, 0).sum().astype(jnp.int32)
+    return cnt, chk
+
+
 def a2a_bucketed_batched(arrays, fills, dest, valid, n_peers: int,
                          cap_out: int, axis_name, packed: bool = False):
     """Batched ``a2a_bucketed``: arrays/dest/valid are [B, L] and ONE
@@ -608,12 +645,14 @@ def a2a_bucketed_batched(arrays, fills, dest, valid, n_peers: int,
                 c = jax.lax.bitcast_convert_type(c, a.dtype)
             outs.append(c)
         # validity from the first array's sentinel (mate ids use fill = n)
-        return outs, outs[0] != fills[0], dropped
+        outs, vrecv = _tapped(axis_name, outs, outs[0] != fills[0])
+        return outs, vrecv, dropped
 
     outs = [exchange(fill_buf(a, fv)) for a, fv in zip(arrays, fills)]
     vbuf = jnp.zeros((b, n_peers * cap_out + 1), jnp.int8).at[bix, slot].set(
         ok.astype(jnp.int8))[:, :-1]
-    return outs, exchange(vbuf).astype(bool), dropped
+    outs, vrecv = _tapped(axis_name, outs, exchange(vbuf).astype(bool))
+    return outs, vrecv, dropped
 
 
 def safe_a2a_caps(cap_blk: int, pr: int, pc: int) -> tuple[int, int]:
@@ -635,7 +674,9 @@ def _make_awpm_dist_batched(spec: GridSpec, n: int, b: int, cap: int,
                             min_gain: float = MIN_GAIN, packed: bool = False,
                             backend: str = "fused",
                             window_steps: int | None = None,
-                            from_state: bool = False):
+                            from_state: bool = False,
+                            degrade_infeasible: bool = False,
+                            exchange_check: bool = False):
     """Build the single-dispatch distributed-batched AWPM (DESIGN.md §5).
 
     One shard_map dispatch runs greedy maximal -> MCM -> dual build -> AWAC
@@ -770,6 +811,8 @@ def _make_awpm_dist_batched(spec: GridSpec, n: int, b: int, cap: int,
             i2 = jnp.take_along_axis(mate_row, bcol, axis=1)
             j2 = jnp.take_along_axis(mate_col, brow, axis=1)
             valid = (brow < n) & (i2 < n) & (j2 < n)
+            if exchange_check:
+                cnt_in, chk_in = _conserved([i2, j2, bval], valid)
             # stage 1: route to owning grid column (by j2)
             (o_i, o_j, o_w), v1, d1 = a2a_bucketed_batched(
                 [i2, j2, bval],
@@ -782,6 +825,20 @@ def _make_awpm_dist_batched(spec: GridSpec, n: int, b: int, cap: int,
                 [_int_fill(n), _int_fill(n), jnp.float32(0)],
                 o_i // br, v1, pr, cap2, row_axes, packed=packed,
             )
+            if exchange_check:
+                # end-to-end conservation: the exchange is a pure routing
+                # of (i, j, w) triples, so a global count balance (minus
+                # capacity drops) and an order-independent checksum (when
+                # drop-free) must both hold every round
+                cnt_out, chk_out = _conserved([qi, qj, qw2], qvalid)
+                tot = jax.lax.psum(
+                    jnp.stack([cnt_in, chk_in, cnt_out, chk_out, d1 + d2]),
+                    all_axes)
+                bad = ((tot[0] - tot[4]) != tot[2]) \
+                    | ((tot[4] == 0) & (tot[1] != tot[3]))
+                aux = jnp.stack([tot[4], bad.astype(jnp.int32)])
+            else:
+                aux = d1 + d2
             if backend == "reference":
                 pos, found = jax.vmap(functools.partial(
                     lex_searchsorted, n_steps=_search_depth(cap)
@@ -821,7 +878,7 @@ def _make_awpm_dist_batched(spec: GridSpec, n: int, b: int, cap: int,
             Cw1 = gather_n(w1_0, col_axis)
             Cw2 = gather_n(w2_0, col_axis)
             Ci = jnp.where(Cgain > NEG, Ci, n).astype(jnp.int32)
-            return Cgain, Ci, Cw1, Cw2, d1 + d2
+            return Cgain, Ci, Cw1, Cw2, aux
 
         if backend in ("xla", "pallas"):
             # 1x1 grid: the block IS the instance — Steps A+B+C run through
@@ -834,7 +891,9 @@ def _make_awpm_dist_batched(spec: GridSpec, n: int, b: int, cap: int,
                 out = batch._cwinners_batched(
                     backend, brow, bcol, bval, rptr, n, state, min_gain,
                     window_steps)
-                return (*out, jnp.array(0, jnp.int32))
+                zero = jnp.zeros((2,), jnp.int32) if exchange_check \
+                    else jnp.array(0, jnp.int32)
+                return (*out, zero)
 
         # ---- the pipeline: shared batched loop skeletons, dist winners ----
         if from_state:
@@ -843,11 +902,17 @@ def _make_awpm_dist_batched(spec: GridSpec, n: int, b: int, cap: int,
             mr, mc = batch.greedy_loop(n, b, greedy_propose)
             mr, mc = batch.mcm_loop(n, b, mr, mc, mcm_parents)
             state0 = uv_state(mr, mc)
-        state, iters, dropped = batch.awac_loop(
-            n, state0, max_iter, min_gain, cwinners)
-        dropped = jax.lax.psum(dropped, all_axes)
+        state, iters, aux = batch.awac_loop(
+            n, state0, max_iter, min_gain, cwinners,
+            active0=(batch.is_perfect_batched(state0, n)
+                     if degrade_infeasible else None),
+            aux0=(jnp.zeros((2,), jnp.int32) if exchange_check else None))
+        if not exchange_check:
+            # the per-round [dropped, integrity] pair is already psum'd
+            # inside cwinners; the plain dropped counter is not
+            aux = jax.lax.psum(aux, all_axes)
         return (state.mate_row, state.mate_col, state.u, state.v, iters,
-                dropped)
+                aux)
 
     blk = spec.block_spec_batched()
     state_specs = (P(), P(), P(), P()) if from_state else ()
@@ -883,6 +948,8 @@ class _DistBatchedAWPM:
     packed: bool = False
     backend: str = "fused"
     window_steps: int | None = None  # None -> measured from the partition
+    degrade_infeasible: bool = False  # skip AWAC on infeasible instances
+    exchange_check: bool = False  # per-round exchange conservation audit
 
     def partition(self, row, col, val):
         """[B, cap] padded COO -> device-sharded [Pr, Pc, B, cap_blk] blocks
@@ -918,7 +985,9 @@ class _DistBatchedAWPM:
         fn = _make_awpm_dist_batched(
             self.spec, self.n, part.b, part.cap, caps, self.max_iter,
             self.min_gain, packed=self.packed, backend=self.backend,
-            window_steps=ws, from_state=state is not None)
+            window_steps=ws, from_state=state is not None,
+            degrade_infeasible=self.degrade_infeasible,
+            exchange_check=self.exchange_check)
         # x64 trace context: every winner reduction collapses to the
         # packed-key single pass (repro.sparse.ops), as in core.batch.
         with enable_x64():

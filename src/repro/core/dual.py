@@ -51,15 +51,34 @@ class DualCertificate:
     rounds: int  # Bellman-Ford rounds used
 
     @property
+    def bound_valid(self) -> bool:
+        """Whether ``weight / upper_bound`` is a meaningful ratio bound.
+        False only for a non-converged certificate with a non-positive
+        upper bound (possible in the raw log2_scaled metric, where all
+        weights <= 0): there a quotient of negatives inverts the
+        inequality and certifies nothing."""
+        return self.tight or self.upper_bound > 0.0
+
+    @property
     def ratio_bound(self) -> float:
-        """Certified lower bound on weight / OPT (1.0 when tight)."""
+        """Certified lower bound on weight / OPT (1.0 when tight).
+        Raises ``ValueError`` when ``bound_valid`` is False — a silent NaN
+        here used to flow into BENCH comparisons; callers that can accept
+        an absent bound should use :meth:`ratio_bound_or`."""
         if self.tight:
             return 1.0
-        if self.upper_bound <= 0.0:
-            # non-positive bound (possible in the raw log2_scaled metric,
-            # where all weights <= 0): weight/bound is not a ratio bound
-            return float("nan")
+        if not self.bound_valid:
+            raise ValueError(
+                f"no valid ratio bound: upper_bound={self.upper_bound:.6g} "
+                f"<= 0 without convergence (raw log2_scaled-style metric?). "
+                f"Check bound_valid or use ratio_bound_or(); the absolute "
+                f"slack ({self.slack:.6g}) is still meaningful.")
         return self.weight / self.upper_bound
+
+    def ratio_bound_or(self, default=None):
+        """``ratio_bound`` when valid, else ``default`` — the NaN-free
+        accessor for reporting pipelines."""
+        return self.ratio_bound if self.bound_valid else default
 
     @property
     def slack(self) -> float:

@@ -450,10 +450,12 @@ def _resolve_window_steps(row, n, window_steps):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("n", "max_iter", "backend", "window_steps")
+    jax.jit, static_argnames=("n", "max_iter", "backend", "window_steps",
+                              "degrade_infeasible")
 )
 def _awac_loop(row, col, val, row_ptr, n: int, state: MatchState,
-               max_iter: int, min_gain, backend: str, window_steps: int):
+               max_iter: int, min_gain, backend: str, window_steps: int,
+               degrade_infeasible: bool = False):
     def body(carry):
         state, it, _ = carry
         Cgain, Ci, Cw1, Cw2 = _cwinners(
@@ -466,15 +468,20 @@ def _awac_loop(row, col, val, row_ptr, n: int, state: MatchState,
         _, it, go = carry
         return go & (it < max_iter)
 
+    # AWAC rotates 4-cycles — cardinality never changes — so on an
+    # imperfect (infeasible-instance) matching every round is pure waste:
+    # skip the loop outright when asked to degrade
+    go0 = is_perfect(state, n) if degrade_infeasible else jnp.array(True)
     state, iters, _ = jax.lax.while_loop(
-        cond, body, (state, jnp.array(0, jnp.int32), jnp.array(True))
+        cond, body, (state, jnp.array(0, jnp.int32), go0)
     )
     return state, iters
 
 
 def awac(row, col, val, n: int, state: MatchState, max_iter: int = 1000,
          min_gain: float = MIN_GAIN, backend: str = "auto",
-         row_ptr=None, window_steps: int | None = None):
+         row_ptr=None, window_steps: int | None = None,
+         degrade_infeasible: bool = False):
     """Full AWAC loop. Returns (state, iters).
 
     backend: "auto" | "xla" (fused sweep, default off-TPU) | "pallas"
@@ -491,14 +498,16 @@ def awac(row, col, val, n: int, state: MatchState, max_iter: int = 1000,
         # Under an outer jit the scope is a no-op (see _x64_scope).
         with _x64_scope(row):
             return _awac_loop(row, col, val, row_ptr, n, state, max_iter,
-                              min_gain, backend, window_steps)
+                              min_gain, backend, window_steps,
+                              degrade_infeasible)
     return _awac_loop(row, col, val, row_ptr, n, state, max_iter, min_gain,
-                      backend, window_steps)
+                      backend, window_steps, degrade_infeasible)
 
 
 def _awpm(row, col, val, n: int, max_iter: int = 1000,
           min_gain: float = MIN_GAIN, backend: str = "auto",
-          window_steps: int | None = None):
+          window_steps: int | None = None,
+          degrade_infeasible: bool = False):
     """Full pipeline: greedy maximal -> MCM -> AWAC. Returns (state, awac_iters).
 
     Internal engine behind ``repro.core.api.solve`` (the single-instance
@@ -507,7 +516,8 @@ def _awpm(row, col, val, n: int, max_iter: int = 1000,
     st = greedy_maximal(row, col, val, n)
     st = mcm(row, col, val, n, st.mate_row, st.mate_col)
     return awac(row, col, val, n, st, max_iter=max_iter, min_gain=min_gain,
-                backend=backend, window_steps=window_steps)
+                backend=backend, window_steps=window_steps,
+                degrade_infeasible=degrade_infeasible)
 
 
 def awpm(row, col, val, n: int, max_iter: int = 1000, min_gain: float = MIN_GAIN,

@@ -149,6 +149,13 @@ def read_mtx(path, expand_symmetry: bool = True) -> CooMatrix:
                 else float(tokens[2]))
         except ValueError:
             raise _err(path, lineno, f"bad {field!r} entry {stripped!r}") from None
+        if v != v or v in (float("inf"), float("-inf")):
+            # python's float() happily parses 'nan'/'inf'; a non-finite
+            # weight poisons every downstream comparison (preflight would
+            # flag it later, but the file position is only known here)
+            raise _err(path, lineno, f"non-finite value {tokens[2]!r} in "
+                                     f"entry {stripped!r}: matching weights "
+                                     f"must be finite")
         if not (1 <= i <= size[0] and 1 <= j <= size[1]):
             raise _err(path, lineno, f"index ({i}, {j}) outside the declared "
                                      f"{size[0]} x {size[1]} shape (Matrix "
@@ -233,6 +240,11 @@ def write_mtx(path, row, col, val=None, shape=None, field: str | None = None,
         if val.shape != row.shape:
             raise MatrixMarketError(
                 f"val shape {val.shape} != index shape {row.shape}")
+        if not np.isfinite(val).all():
+            k = int(np.nonzero(~np.isfinite(val))[0][0])
+            raise MatrixMarketError(
+                f"non-finite value {val[k]!r} at entry {k} — read_mtx "
+                f"would reject the file")
         if field == "integer" and not np.all(val == np.trunc(val)):
             raise MatrixMarketError("field 'integer' needs integral values")
     if shape is None:

@@ -83,7 +83,7 @@ class EvalRecord:
     nnz: int
     weight: float
     upper_bound: float
-    ratio_bound: float  # certified lower bound on weight/OPT (nan: see dual)
+    ratio_bound: float | None  # certified lower bound on weight/OPT (None: no valid bound)
     ratio_exact: float | None  # vs ref.exact_mwpm when tractable
     tight: bool
     awac_iters: int
@@ -173,7 +173,7 @@ def _record(case: EvalCase, engine: str, res, wall_s: float, opt,
         name=case.name, source=case.source, transform=case.transform,
         engine=engine, n=case.problem.n, nnz=case.nnz,
         weight=float(cert.weight), upper_bound=float(cert.upper_bound),
-        ratio_bound=float(cert.ratio_bound), ratio_exact=ratio_exact,
+        ratio_bound=cert.ratio_bound_or(None), ratio_exact=ratio_exact,
         tight=bool(cert.tight), awac_iters=int(np.asarray(res.awac_iters)),
         wall_s=float(wall_s), perfect=bool(np.asarray(res.perfect)),
         identical_to_reference=identical, certified_sound=sound)
@@ -357,9 +357,11 @@ def run_eval(spec: dict | None = None,
 
 
 def _fmt_ratio(x) -> str:
-    if x is None:
+    # None: dual.bound_valid was False (no certified ratio); NaN can no
+    # longer reach here — DualCertificate.ratio_bound raises instead.
+    if x is None or x != x:
         return "-"
-    return "nan" if x != x else f"{x:.4f}"
+    return f"{x:.4f}"
 
 
 def to_markdown(records: Sequence[EvalRecord]) -> str:

@@ -28,7 +28,7 @@ class StragglerMonitor:
         self.ewma[rank] = dt if prev is None else \
             self.alpha * dt + (1 - self.alpha) * prev
         self.n[rank] = self.n.get(rank, 0) + 1
-        self.history.append((rank, dt))
+        self.history.append((step, rank, dt))
         self._evaluate()
 
     def _evaluate(self):
@@ -40,3 +40,14 @@ class StragglerMonitor:
 
     def slow_ranks(self):
         return sorted(self.flagged)
+
+    def slow_steps(self, rank: int = 0):
+        """Per-step alarm for a SINGLE rank (cross-rank z-scoring needs >= 2
+        ranks; a lone serving loop still wants to know which dispatches
+        stalled): steps whose wall time exceeded ``threshold`` x the rank's
+        median, once ``warmup`` samples exist."""
+        dts = [(s, t) for s, r, t in self.history if r == rank]
+        if len(dts) < max(self.warmup, 1):
+            return []
+        med = float(np.median([t for _, t in dts]))
+        return sorted(s for s, t in dts if t > self.threshold * med)

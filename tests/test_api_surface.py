@@ -17,10 +17,14 @@ EXPECTED_EXPORTS = [
     "BACKENDS",
     "BipartiteGraph",
     "DualCertificate",
+    "InfeasibleProblemError",
     "MIN_GAIN",
     "MatchResult",
     "Matcher",
     "MatchingProblem",
+    "ON_INVALID",
+    "PreflightError",
+    "PreflightReport",
     "ProblemSpec",
     "SolveOptions",
     "api",
@@ -34,6 +38,7 @@ EXPECTED_EXPORTS = [
     "matrix_suite",
     "pivot",
     "plan",
+    "preflight",
     "ref",
     "single",
     "solve",
@@ -45,6 +50,7 @@ EXPECTED_API_EXPORTS = [
     "MatchResult",
     "Matcher",
     "MatchingProblem",
+    "ON_INVALID",
     "ProblemSpec",
     "SolveOptions",
     "plan",

@@ -1,0 +1,166 @@
+"""Chaos harness (runtime.chaos, DESIGN.md §9): injector mechanics and the
+in-process detect/survive cases. The full fault matrix on an 8-fake-device
+2x4 grid is the dedicated CI chaos job (`python -m repro.runtime.chaos`);
+here a 2x2 subprocess case keeps a real multi-device exchange fault under
+tier-1."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _subproc import run_with_devices
+from repro.core import (
+    MatchingProblem,
+    PreflightError,
+    SolveOptions,
+    graph,
+    solve,
+)
+from repro.core import batch, dist, single
+from repro.runtime import chaos
+from repro.runtime.resilient import (
+    ResilientOptions,
+    TransientFault,
+    VerificationError,
+    resilient_solve,
+)
+
+
+def _problem(n=16, seed=0):
+    return MatchingProblem.from_graph(
+        graph.generate(n, avg_degree=4.0, seed=seed))
+
+
+# --------------------------------------------------------------------------
+# injector mechanics
+# --------------------------------------------------------------------------
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        chaos.FaultSpec("meteor_strike")
+    with pytest.raises(ValueError, match="stage"):
+        chaos.FaultSpec("drop", stage=3)
+
+
+def test_selected_is_deterministic_and_counts():
+    valid = jnp.array([[True, False, True, True, False, True]])
+    a = np.asarray(chaos._selected(valid, seed=7, count=2))
+    b = np.asarray(chaos._selected(valid, seed=7, count=2))
+    assert np.array_equal(a, b)
+    assert a.sum() == 2
+    assert not (a & ~np.asarray(valid)).any()  # only valid entries chosen
+    c = np.asarray(chaos._selected(valid, seed=8, count=2))
+    assert not np.array_equal(a, c)  # the seed rotates the positions
+
+
+def test_inject_installs_and_restores_taps():
+    assert dist._EXCHANGE_TAP is None and batch._CONVERGENCE_TAP is None
+    with chaos.inject(chaos.FaultSpec("drop", stage=1)):
+        assert dist._EXCHANGE_TAP is not None
+        assert batch._CONVERGENCE_TAP is None
+    assert dist._EXCHANGE_TAP is None
+    with chaos.inject(chaos.FaultSpec("flip_converged")):
+        assert batch._CONVERGENCE_TAP is not None
+        assert dist._EXCHANGE_TAP is None
+    assert batch._CONVERGENCE_TAP is None
+
+
+def test_failing_backend_counts_and_restores():
+    orig = single._awpm
+    with chaos.failing_backend("xla", fail_times=2) as state:
+        with pytest.raises(TransientFault):
+            solve(_problem(), SolveOptions(backend="xla"))
+        assert state["n"] == 1
+        # other backends pass through untouched
+        assert bool(solve(_problem(),
+                          SolveOptions(backend="reference")).perfect)
+    assert single._awpm is orig
+
+
+# --------------------------------------------------------------------------
+# in-process detect/survive cases (no multi-device mesh needed)
+# --------------------------------------------------------------------------
+
+
+def test_flip_converged_detected_by_convergence_audit():
+    # an instance whose reference solve needs >= 3 AWAC rounds: stopping
+    # after round 1 provably leaves an augmenting 4-cycle. Batched problems
+    # route every local rung through the tainted batched loop, so the
+    # verify_convergence audit is the only thing standing between a
+    # "looks converged" result and the caller.
+    p, _ = chaos._pick_instance(48, 6.0, min_awac_iters=3)
+    pb = MatchingProblem.stack([p, p])
+    with chaos.inject(chaos.FaultSpec("flip_converged", count=1)):
+        with pytest.raises(VerificationError) as exc:
+            resilient_solve(
+                pb, resilience=ResilientOptions(verify_convergence=True))
+    assert any(a.outcome == "verify_failed" for a in exc.value.report.attempts)
+
+
+def test_nan_input_detected_or_sanitized():
+    p = _problem()
+    ref = solve(p)
+    # NaN into a padding slot via a widened capacity: sanitize restores p
+    real = np.asarray(p.row) < p.n
+    row = np.concatenate([np.asarray(p.row)[real], [0]])
+    col = np.concatenate([np.asarray(p.col)[real], [0]])
+    val = np.concatenate([np.asarray(p.val)[real], [np.nan]])
+    p_nan = MatchingProblem.from_coo(row[:-1], col[:-1], val[:-1], p.n,
+                                     capacity=int(real.sum()) + 2)
+    r = np.asarray(p_nan.row).copy()
+    c = np.asarray(p_nan.col).copy()
+    v = np.asarray(p_nan.val).copy()
+    pad = np.flatnonzero(r >= p.n)[-1]
+    r[pad], c[pad], v[pad] = 0, 0, np.nan
+    p_nan = MatchingProblem(row=r, col=c, val=v, n=p.n)
+    with pytest.raises(PreflightError):
+        solve(p_nan)
+    rr = resilient_solve(p_nan, SolveOptions(on_invalid="sanitize"))
+    assert np.array_equal(np.asarray(rr.result.mate_row),
+                          np.asarray(ref.mate_row))
+
+
+def test_assert_all_ok_raises_on_silent_corruption():
+    records = [
+        {"fault": "drop@stage1", "mode": "detect", "ok": True, "detail": ""},
+        {"fault": "drop@stage1", "mode": "survive", "ok": False,
+         "detail": "served a corrupted matching"},
+    ]
+    with pytest.raises(AssertionError, match="drop@stage1"):
+        chaos.assert_all_ok(records)
+    assert chaos.assert_all_ok(records[:1]) == records[:1]
+
+
+# --------------------------------------------------------------------------
+# a real multi-device exchange fault (2x2 subprocess)
+# --------------------------------------------------------------------------
+
+
+CHAOS_2X2 = r"""
+import jax, numpy as np
+from repro.core import api, dist
+from repro.runtime import chaos
+from repro.runtime.resilient import resilient_solve
+
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+p, ref = chaos._pick_instance(32, 5.0, min_awac_iters=1)
+gopts = api.SolveOptions(grid=mesh, exchange_check=True)
+assert api.solve(p, gopts).perfect  # clean baseline through the grid
+for kind, stage in (("drop", 1), ("corrupt_weight", 2)):
+    fault = chaos.FaultSpec(kind, stage=stage, seed=7)
+    with chaos.inject(fault):
+        try:
+            api.solve(p, gopts)
+            raise SystemExit(f"{kind}@stage{stage} not detected")
+        except dist.ExchangeIntegrityError:
+            pass
+        rr = resilient_solve(p, gopts)
+        assert chaos._bit_identical(rr.result, ref), kind
+        assert rr.report.degraded, kind
+print("CHAOS_2X2_OK")
+"""
+
+
+def test_exchange_faults_detected_and_survived_2x2():
+    out = run_with_devices(CHAOS_2X2, 4)
+    assert "CHAOS_2X2_OK" in out

@@ -138,6 +138,14 @@ def test_integer_field_exact():
      "1-based"),
     ("%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 abc\n",
      "bad 'real' entry"),
+    ("%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 nan\n",
+     "non-finite value 'nan'"),
+    ("%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n"
+     "2 2 inf\n", "non-finite value 'inf'"),
+    ("%%MatrixMarket matrix coordinate real general\n2 2 1\n1 2 -Infinity\n",
+     "non-finite value '-Infinity'"),
+    ("%%MatrixMarket matrix coordinate real general\n2 2 1\n1 1 NaN\n",
+     "non-finite value 'NaN'"),
     ("%%MatrixMarket matrix coordinate pattern general\n2 2 1\n1 1 1.0\n",
      "expected 2 tokens"),
     ("%%MatrixMarket matrix coordinate real symmetric\n2 3 1\n1 1 1.0\n",
@@ -157,6 +165,22 @@ def test_error_names_file_and_line(tmp_path):
                    "% comment\n2 2 1\n9 9 1.0\n")
     with pytest.raises(MatrixMarketError, match=r"where\.mtx:4"):
         read_mtx(out)
+
+
+def test_nonfinite_value_error_is_located(tmp_path):
+    # the file position is only known at parse time — preflight would catch
+    # the NaN later but could not say which line it came from
+    out = tmp_path / "naned.mtx"
+    out.write_text("%%MatrixMarket matrix coordinate real general\n"
+                   "3 3 3\n1 1 1.0\n2 2 nan\n3 3 1.0\n")
+    with pytest.raises(MatrixMarketError, match=r"naned\.mtx:4.*non-finite"):
+        read_mtx(out)
+
+
+def test_write_mtx_rejects_nonfinite(tmp_path):
+    with pytest.raises(MatrixMarketError, match="non-finite"):
+        write_mtx(tmp_path / "w.mtx", [0, 1], [0, 1], [1.0, float("inf")],
+                  shape=(2, 2))
 
 
 # --------------------------------------------------------------------------

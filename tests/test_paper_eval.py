@@ -42,7 +42,7 @@ def test_fixture_bounds_match_oracle(records):
     # optimum where computable — run_eval already raises otherwise, but pin
     # the reported numbers here too
     for r in records:
-        if r.ratio_exact is not None:
+        if r.ratio_exact is not None and r.ratio_bound is not None:
             assert r.ratio_bound <= r.ratio_exact + 1e-6
 
 

@@ -1,0 +1,228 @@
+"""Preflight sanitization + degrade policies (core.preflight, DESIGN.md §9):
+every degenerate input is typed and located, sanitize repairs exactly the
+fatal data issues, and the solve pipeline short-circuits AWAC on infeasible
+instances under every policy."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    InfeasibleProblemError,
+    MatchingProblem,
+    PreflightError,
+    SolveOptions,
+    graph,
+    solve,
+)
+from repro.core.preflight import PreflightReport, preflight, sanitize
+
+
+def _problem(n=12, seed=0, **kw):
+    return MatchingProblem.from_graph(
+        graph.generate(n, avg_degree=4.0, seed=seed, **kw))
+
+
+def _with_edit(p, pos, row=None, col=None, val=None):
+    r = np.asarray(p.row).copy()
+    c = np.asarray(p.col).copy()
+    v = np.asarray(p.val).copy()
+    if row is not None:
+        r[pos] = row
+    if col is not None:
+        c[pos] = col
+    if val is not None:
+        v[pos] = val
+    return MatchingProblem(row=r, col=c, val=v, n=p.n)
+
+
+# --------------------------------------------------------------------------
+# the structural pass
+# --------------------------------------------------------------------------
+
+
+def test_clean_problem_reports_ok():
+    report = preflight(_problem())
+    assert report.ok and report.solvable
+    assert report.summary() == "preflight: clean"
+
+
+def test_nonfinite_weight_is_fatal_and_located():
+    p = _with_edit(_problem(), 3, val=np.nan)
+    report = preflight(p)
+    assert not report.ok
+    (issue,) = report.fatal
+    assert issue.kind == "nonfinite_weight"
+    assert issue.severity == "fatal"
+    assert 3 in issue.where
+    assert not report.solvable
+
+
+def test_duplicate_edge_is_fatal():
+    p = _problem()
+    r = np.asarray(p.row)
+    # copy edge 0 over edge 1 -> exact duplicate coordinates
+    p = _with_edit(p, 1, row=int(r[0]), col=int(np.asarray(p.col)[0]))
+    report = preflight(p)
+    assert any(i.kind == "duplicate_edge" for i in report.fatal)
+
+
+def test_negative_weight_is_warning_only():
+    p = _with_edit(_problem(), 0, val=-2.5)
+    report = preflight(p)
+    assert not report.ok
+    assert report.solvable  # warnings never block
+    (issue,) = report.warnings
+    assert issue.kind == "negative_weight"
+
+
+def test_empty_column_is_structural():
+    g = graph.generate(10, avg_degree=3.0, seed=1)
+    keep = np.asarray(g.col) != 4
+    p = MatchingProblem.from_coo(np.asarray(g.row)[keep],
+                                 np.asarray(g.col)[keep],
+                                 np.asarray(g.val)[keep], g.n)
+    report = preflight(p)
+    kinds = {i.kind for i in report.structural}
+    assert "empty_col" in kinds
+    assert not report.solvable
+
+
+def test_mcm_screen_finds_hall_deficiency():
+    # no empty row or column, yet infeasible: columns {0, 1, 2} are only
+    # reachable from rows {0, 1} (a Hall violator the cheap degree check
+    # cannot see — only the MCM screen catches it)
+    row = np.array([0, 0, 0, 1, 1, 1, 2, 3])
+    col = np.array([0, 1, 2, 0, 1, 2, 3, 3])
+    val = np.ones(8)
+    p = MatchingProblem.from_coo(row, col, val, 4)
+    assert preflight(p).ok  # cheap pass sees nothing
+    report = preflight(p, feasibility=True)
+    assert report.checked_feasibility
+    (issue,) = report.structural
+    assert issue.kind == "deficient" and issue.count == 1
+
+
+def test_batched_issues_carry_instance_index():
+    good = _problem(n=10, seed=0)
+    bad = _with_edit(_problem(n=10, seed=1), 2, val=np.inf)
+    report = preflight(MatchingProblem.stack([good, bad]))
+    (issue,) = report.fatal
+    assert issue.instance == 1
+
+
+# --------------------------------------------------------------------------
+# sanitize
+# --------------------------------------------------------------------------
+
+
+def test_sanitize_drops_nonfinite_and_merges_duplicates_keep_max():
+    p = _problem(n=10)
+    r = np.asarray(p.row)
+    c = np.asarray(p.col)
+    real = int((r < p.n).sum())
+    # duplicate edge 0 with a heavier weight, NaN out edge 2
+    p_bad = _with_edit(p, 1, row=int(r[0]), col=int(c[0]), val=99.0)
+    p_bad = _with_edit(p_bad, 2, val=np.nan)
+    clean, report = sanitize(p_bad)
+    assert report.fatal
+    assert clean.cap == p.cap  # planned Matcher shapes still match
+    rc = np.asarray(clean.row)
+    vc = np.asarray(clean.val)
+    assert int((rc < p.n).sum()) == real - 2  # one dup + one NaN gone
+    # keep-max: the surviving (r0, c0) edge carries the heavier weight
+    at = (rc == int(r[0])) & (np.asarray(clean.col) == int(c[0]))
+    assert vc[at] == pytest.approx(99.0)
+
+
+def test_sanitize_is_identity_on_clean_problems():
+    p = _problem()
+    clean, report = sanitize(p)
+    assert clean is p and report.ok
+
+
+# --------------------------------------------------------------------------
+# solve() integration: the three policies
+# --------------------------------------------------------------------------
+
+
+def _deficient(n=12, seed=2, victim=5):
+    g = graph.generate(n, avg_degree=4.0, seed=seed)
+    keep = np.asarray(g.col) != victim
+    return MatchingProblem.from_coo(np.asarray(g.row)[keep],
+                                    np.asarray(g.col)[keep],
+                                    np.asarray(g.val)[keep], g.n)
+
+
+def test_raise_policy_rejects_fatal_and_infeasible():
+    with pytest.raises(PreflightError):
+        solve(_with_edit(_problem(), 0, val=np.nan))
+    with pytest.raises(InfeasibleProblemError) as exc:
+        solve(_deficient())
+    assert not exc.value.report.solvable
+
+
+def test_sanitize_policy_repairs_data_but_still_raises_on_structure():
+    g = graph.generate(12, avg_degree=4.0, seed=0)
+    real = np.asarray(g.row) < g.n
+    p = MatchingProblem.from_coo(
+        np.asarray(g.row)[real], np.asarray(g.col)[real],
+        np.asarray(g.val)[real], g.n, capacity=int(real.sum()) + 4)
+    res_clean = solve(p)
+    # NaN in a padding slot: sanitization restores exactly p
+    pad = int(np.flatnonzero(np.asarray(p.row) >= p.n)[-1])
+    p_nan = _with_edit(p, pad, row=0, col=0, val=np.nan)
+    res = solve(p_nan, SolveOptions(on_invalid="sanitize"))
+    assert np.array_equal(np.asarray(res.mate_row),
+                          np.asarray(res_clean.mate_row))
+    assert res.diagnosis is not None  # what was repaired is reported
+    with pytest.raises(InfeasibleProblemError):
+        solve(_deficient(), SolveOptions(on_invalid="sanitize"))
+
+
+def test_degrade_policy_serves_maximal_matching_with_diagnosis():
+    res = solve(_deficient(victim=5),
+                SolveOptions(on_invalid="degrade", max_iter=10**6))
+    assert not bool(res.perfect)
+    assert int(res.awac_iters) == 0  # AWAC short-circuited after MCM
+    assert np.asarray(res.mate_row)[5] == 12  # sentinel for the victim
+    report = res.diagnosis
+    assert isinstance(report, PreflightReport) and not report.solvable
+    kinds = {i.kind for i in report.issues}
+    assert {"empty_col", "deficient"} <= kinds
+
+
+def test_degrade_batched_mixed_feasibility():
+    feasible = _problem(n=12, seed=3)
+    res = solve(MatchingProblem.stack([feasible, _deficient()]),
+                SolveOptions(on_invalid="degrade"))
+    perfect = np.asarray(res.perfect)
+    assert bool(perfect[0]) and not bool(perfect[1])
+    assert [i.instance for i in res.diagnosis.structural] == [1, 1]
+
+
+def test_feasible_solve_is_unchanged_and_diagnosis_none():
+    p = _problem()
+    res = solve(p)
+    assert bool(res.perfect) and res.diagnosis is None
+
+
+def test_diagnosis_survives_pytree_roundtrip():
+    res = solve(_deficient(), SolveOptions(on_invalid="degrade"))
+    leaves, treedef = jax.tree_util.tree_flatten(res)
+    back = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert back.diagnosis == res.diagnosis
+
+
+def test_preflight_skipped_under_jit():
+    # traced solves cannot run host-side checks; the pipeline must still
+    # trace (and the early exit is weight-level, not diagnosis-level)
+    p = _problem()
+
+    @jax.jit
+    def f(row, col, val):
+        q = MatchingProblem(row=row, col=col, val=val, n=p.n)
+        return solve(q).weight
+
+    w = f(jnp.asarray(p.row), jnp.asarray(p.col), jnp.asarray(p.val))
+    assert float(w) == pytest.approx(float(solve(p).weight))

@@ -1,4 +1,6 @@
 """Hypothesis property tests on the matching system's invariants."""
+import time
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -7,9 +9,11 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import batch, graph, ref, single
+from repro.core.api import MatchingProblem, SolveOptions, solve
 from repro.sparse.ops import lex_searchsorted
 
 SET = dict(max_examples=25, deadline=None)
+LOCAL_BACKENDS = ("reference", "xla", "pallas")
 
 
 @st.composite
@@ -20,6 +24,20 @@ def planted_graph(draw, n=None):
     kind = draw(st.sampled_from(["uniform", "circuit", "antigreedy", "banded"]))
     seed = draw(st.integers(0, 10_000))
     return graph.generate(n, avg_degree=deg, kind=kind, seed=seed)
+
+
+@st.composite
+def deficient_problem(draw):
+    """A planted graph with every edge of one column removed — structurally
+    infeasible (that column can never be matched), with the victim column
+    drawn so the deficiency is not always at the boundary."""
+    g = draw(planted_graph())
+    victim = draw(st.integers(0, g.n - 1))
+    keep = np.asarray(g.col) != victim
+    row = np.asarray(g.row)[keep]
+    col = np.asarray(g.col)[keep]
+    val = np.asarray(g.val)[keep]
+    return MatchingProblem.from_coo(row, col, val, g.n), victim
 
 
 @st.composite
@@ -109,6 +127,70 @@ def test_survivor_cycles_are_vertex_disjoint(g):
         for c in (j, c2):
             assert c not in cols
             cols.add(c)
+
+
+@given(deficient_problem())
+@settings(max_examples=15, deadline=None)
+def test_infeasible_short_circuits_consistently_across_backends(arg):
+    """Structurally deficient instances must terminate promptly with
+    ``perfect=False`` under ``on_invalid="degrade"`` — AWAC preserves
+    cardinality, so its round budget is pure waste on an imperfect matching
+    and the pipeline short-circuits after MCM (``awac_iters == 0`` even with
+    an absurd ``max_iter``). The maximal matching and its sentinel slots
+    must agree bit-for-bit across every local backend."""
+    problem, victim = arg
+    n = problem.n
+    mates = {}
+    for backend in LOCAL_BACKENDS:
+        opts = SolveOptions(backend=backend, on_invalid="degrade",
+                            max_iter=10**6)
+        t0 = time.perf_counter()
+        res = solve(problem, opts)
+        dt = time.perf_counter() - t0
+        # timing assertion: O(MCM) work, never max_iter AWAC rounds (a
+        # million rounds at ~ms each would be hours, not seconds)
+        assert dt < 5.0, f"{backend}: {dt:.1f}s — AWAC was not skipped?"
+        assert not bool(res.perfect)
+        assert int(res.awac_iters) == 0
+        mr = np.asarray(res.mate_row)
+        mc = np.asarray(res.mate_col)
+        assert mr.shape == mc.shape == (n + 1,)
+        assert mr[victim] == n  # the deficient column is unmatched
+        assert res.diagnosis is not None and not res.diagnosis.solvable
+        mates[backend] = (mr, mc)
+        # the partial matching is still consistent: matched pairs mutual,
+        # unmatched slots hold the sentinel n
+        matched = np.nonzero(mr[:n] < n)[0]
+        assert np.array_equal(mc[mr[matched]], matched)
+    ref_mr, ref_mc = mates["reference"]
+    for backend in LOCAL_BACKENDS[1:]:
+        mr, mc = mates[backend]
+        assert np.array_equal(mr, ref_mr), f"{backend} mate_row diverges"
+        assert np.array_equal(mc, ref_mc), f"{backend} mate_col diverges"
+
+
+def test_infeasible_short_circuits_on_1x1_grid():
+    """The distributed route honours the same degrade short-circuit and
+    produces the same sentinel mates as the local engines (1x1 grid runs
+    in-process; the multi-device variant lives in tests/test_chaos.py)."""
+    import jax
+
+    g = graph.generate(16, avg_degree=4.0, kind="uniform", seed=3)
+    keep = np.asarray(g.col) != 5
+    problem = MatchingProblem.from_coo(np.asarray(g.row)[keep],
+                                       np.asarray(g.col)[keep],
+                                       np.asarray(g.val)[keep], g.n)
+    local = solve(problem, SolveOptions(on_invalid="degrade", max_iter=10**6))
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                             ("data", "model"))
+    dist = solve(problem, SolveOptions(grid=mesh, on_invalid="degrade",
+                                       max_iter=10**6))
+    assert not bool(dist.perfect) and int(dist.awac_iters) == 0
+    assert np.array_equal(np.asarray(dist.mate_row),
+                          np.asarray(local.mate_row))
+    assert np.array_equal(np.asarray(dist.mate_col),
+                          np.asarray(local.mate_col))
+    assert dist.diagnosis is not None and not dist.diagnosis.solvable
 
 
 @given(
