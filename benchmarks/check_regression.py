@@ -17,8 +17,18 @@ Two checks, per row name present in BOTH files:
 Rows that exist only on one side are reported but never fail the gate
 (benches grow new rows every PR). Exits 1 on any violation.
 
+A third, optional check gates the dispatch table that ``backend="auto"``
+consults (``repro.kernels.dispatch``): given the committed table and a
+freshly measured one (``--dispatch BASELINE FRESH``), every committed
+winner must (a) actually be the argmin of its own committed measurements —
+a table whose winner contradicts its numbers is corrupt — and (b) still be
+within ``--dispatch-factor`` (default 1.2x) of the freshly measured best
+for that shape class. A committed winner losing by more than that means
+``auto`` is demonstrably mis-routing and the table must be regenerated.
+
 Usage: python benchmarks/check_regression.py \
-           --baseline /tmp/baseline.json --fresh BENCH_kernels.json
+           --baseline /tmp/baseline.json --fresh BENCH_kernels.json \
+           [--dispatch /tmp/dispatch.baseline.json BENCH_dispatch.json]
 """
 from __future__ import annotations
 
@@ -61,11 +71,54 @@ def check(baseline: dict[str, dict], fresh: dict[str, dict],
     return failures
 
 
+def _dispatch_entries(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        return json.load(f).get("entries", {})
+
+
+def check_dispatch(committed: dict[str, dict], fresh: dict[str, dict],
+                   factor: float) -> list[str]:
+    """Gate the committed auto-dispatch table against fresh measurements."""
+    failures = []
+    for key in sorted(committed):
+        entry = committed[key]
+        winner, us = entry.get("winner"), entry.get("us_per_iter", {})
+        if not winner or not us:
+            failures.append(f"dispatch {key}: malformed entry {entry!r}")
+            continue
+        if winner not in us:
+            failures.append(
+                f"dispatch {key}: winner {winner!r} has no measurement")
+            continue
+        best = min(us, key=us.get)
+        if us[winner] > factor * us[best]:
+            failures.append(
+                f"dispatch {key}: committed winner {winner!r} "
+                f"({us[winner]:.1f}us) contradicts its own measurements "
+                f"(best {best!r} at {us[best]:.1f}us, > {factor}x)")
+        f_us = fresh.get(key, {}).get("us_per_iter", {})
+        if not f_us or winner not in f_us:
+            continue  # class not re-measured here: report-only
+        f_best = min(f_us, key=f_us.get)
+        if f_us[winner] > factor * f_us[f_best]:
+            failures.append(
+                f"dispatch {key}: 'auto' would route to {winner!r} "
+                f"({f_us[winner]:.1f}us fresh) but {f_best!r} measures "
+                f"{f_us[f_best]:.1f}us (> {factor}x loss) — regenerate "
+                f"BENCH_dispatch.json")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--fresh", required=True)
     ap.add_argument("--factor", type=float, default=2.5)
+    ap.add_argument("--dispatch", nargs=2,
+                    metavar=("COMMITTED", "FRESH"),
+                    help="gate the committed dispatch table against a "
+                         "freshly measured one")
+    ap.add_argument("--dispatch-factor", type=float, default=1.2)
     args = ap.parse_args()
     baseline, fresh = _rows(args.baseline), _rows(args.fresh)
     only_b = sorted(set(baseline) - set(fresh))
@@ -75,13 +128,21 @@ def main() -> None:
     if only_f:
         print(f"# new rows (not gated yet): {only_f}")
     failures = check(baseline, fresh, args.factor)
+    if args.dispatch:
+        failures += check_dispatch(
+            _dispatch_entries(args.dispatch[0]),
+            _dispatch_entries(args.dispatch[1]), args.dispatch_factor)
     for msg in failures:
         print(f"FAIL {msg}")
     n = len(set(baseline) & set(fresh))
     if failures:
         sys.exit(1)
+    extra = ""
+    if args.dispatch:
+        extra = (f", dispatch winners within {args.dispatch_factor}x of "
+                 f"fresh best")
     print(f"# regression gate OK: {n} shared rows within {args.factor}x, "
-          f"all correctness flags True")
+          f"all correctness flags True{extra}")
 
 
 if __name__ == "__main__":

@@ -58,12 +58,16 @@ from repro.core.constants import MIN_GAIN
 from repro.core.single import MatchState
 from repro.sparse.csr import window_depth
 
-#: every backend ``SolveOptions`` accepts. "auto" resolves to the fastest
-#: engine for the dispatch target (pallas on TPU / fused XLA sweep locally;
-#: the "fused" exchange+windowed-join engine on a grid). "reference" is the
-#: seed bit-exactness oracle. "fused" is distributed-only; "xla"/"pallas"
+#: every backend ``SolveOptions`` accepts. "auto" resolves locally via the
+#: MEASURED dispatch table (``repro.kernels.dispatch``, refreshed by the
+#: kernels bench job) — the winner for this platform and shape class, not a
+#: hard-coded platform rule; on a grid it resolves to the "fused"
+#: exchange+windowed-join engine. "reference" is the seed bit-exactness
+#: oracle. "pallas_persistent" runs the whole AWAC loop in one persistent
+#: kernel and is local-only; "fused" is distributed-only; "xla"/"pallas"
 #: with a grid require the 1x1 grid (the block is the whole instance).
-BACKENDS = ("auto", "reference", "xla", "pallas", "fused")
+BACKENDS = ("auto", "reference", "xla", "pallas", "pallas_persistent",
+            "fused")
 
 #: ``SolveOptions.on_invalid`` policies (see ``core.preflight``).
 ON_INVALID = ("raise", "sanitize", "degrade")
@@ -342,6 +346,11 @@ class SolveOptions:
         if self.grid is not None:
             spec = _as_grid_spec(self.grid)
             object.__setattr__(self, "grid", spec)
+            if self.backend == "pallas_persistent":
+                raise ValueError(
+                    "backend 'pallas_persistent' runs the whole AWAC loop "
+                    "inside one local kernel and cannot participate in the "
+                    "distributed exchange — drop SolveOptions.grid")
             if self.backend in ("xla", "pallas") and \
                     (spec.pr, spec.pc) != (1, 1):
                 raise ValueError(
@@ -376,6 +385,26 @@ class SolveOptions:
 # --------------------------------------------------------------------------
 
 
+@dataclasses.dataclass(frozen=True)
+class ExecutionInfo:
+    """How a solve actually executed — the honest dispatch record.
+
+    ``backend``: the concrete engine that ran (never "auto").
+    ``source``: how it was chosen — "explicit" (user-pinned), "table" (the
+    measured dispatch table, ``repro.kernels.dispatch``), "heuristic"
+    (platform fallback when the table has no measurements for this
+    platform), or "grid-default" (the distributed route's fused engine).
+    ``ran_interpreted``: for Pallas backends, whether the kernel executes
+    in the Pallas interpreter (True on platforms without a compiled
+    lowering) — None for non-Pallas backends. Interpreter execution is
+    correctness-grade, never performance-grade.
+    """
+
+    backend: str
+    source: str
+    ran_interpreted: bool | None = None
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True, eq=False)  # eq=False: see MatchingProblem
 class MatchResult:
@@ -387,8 +416,10 @@ class MatchResult:
 
     ``diagnosis`` is a ``core.preflight.PreflightReport`` (or None) when
     preflight found issues worth surfacing — always present on a degraded
-    (``perfect=False``) result, never on a clean solve. It rides as pytree
-    aux_data (static), so it is None for results built under a trace.
+    (``perfect=False``) result, never on a clean solve. ``execution`` is an
+    :class:`ExecutionInfo` recording the engine that actually ran (resolved
+    backend, dispatch source, interpreter flag). Both ride as pytree
+    aux_data (static).
     """
 
     mate_row: Any  # [n+1] or [B, n+1] int32; sentinel n = unmatched
@@ -397,14 +428,16 @@ class MatchResult:
     awac_iters: Any  # AWAC rounds until convergence, i32
     perfect: Any  # bool: every column matched
     diagnosis: Any = None  # PreflightReport | None (static, host-side only)
+    execution: Any = None  # ExecutionInfo | None (static)
 
     def tree_flatten(self):
         return (self.mate_row, self.mate_col, self.weight, self.awac_iters,
-                self.perfect), self.diagnosis
+                self.perfect), (self.diagnosis, self.execution)
 
     @classmethod
-    def tree_unflatten(cls, diagnosis, leaves):
-        return cls(*leaves, diagnosis=diagnosis)
+    def tree_unflatten(cls, aux, leaves):
+        diagnosis, execution = aux
+        return cls(*leaves, diagnosis=diagnosis, execution=execution)
 
 
 def _result(state: MatchState, iters, n: int, batched: bool) -> MatchResult:
@@ -486,6 +519,43 @@ def _finish(problem: MatchingProblem, result: MatchResult,
     return dataclasses.replace(result, diagnosis=report)
 
 
+def _execution_info(problem: MatchingProblem,
+                    options: SolveOptions) -> ExecutionInfo:
+    """Resolve what will actually run, for ``MatchResult.execution``.
+
+    Mirrors the engines' own resolution (``core.single.resolve_backend`` /
+    the kernel wrappers' ``interpret=None`` auto-detection) so the record
+    matches the dispatch decision made inside the solve."""
+    if options.grid is not None:
+        return ExecutionInfo(
+            backend=options._dist_backend(),
+            source="explicit" if options.backend != "auto"
+            else "grid-default")
+    batch = problem.batch_size
+    if options.backend != "auto":
+        backend, source = options.backend, "explicit"
+    else:
+        try:
+            from repro.kernels.dispatch import choose_backend
+
+            winner = choose_backend(n=problem.n, batch=batch)
+        except ImportError:
+            winner = None
+        backend = winner if winner is not None else \
+            _single.resolve_backend("auto", n=problem.n, batch=batch)
+        source = "table" if winner is not None else "heuristic"
+    interpreted = None
+    if backend.startswith("pallas"):
+        try:
+            from repro.kernels.backend import resolve_execution
+
+            interpreted = resolve_execution(None).interpret
+        except ImportError:
+            pass
+    return ExecutionInfo(backend=backend, source=source,
+                         ran_interpreted=interpreted)
+
+
 def solve(problem: MatchingProblem,
           options: SolveOptions | None = None) -> MatchResult:
     """Run the full AWPM pipeline (greedy maximal -> MCM -> AWAC) on
@@ -511,6 +581,8 @@ def solve(problem: MatchingProblem,
             backend=options.backend, window_steps=options.window_steps,
             degrade_infeasible=True)
         result = _result(state, iters, problem.n, batched=False)
+    result = dataclasses.replace(
+        result, execution=_execution_info(problem, options))
     return _finish(problem, result, options, report)
 
 

@@ -548,10 +548,22 @@ def awac_batched(row, col, val, n: int, state: MatchState,
 
     Same backend contract as ``single.awac``; every instance's result and
     iteration count are bit-identical to its own single-instance run."""
-    backend = single.resolve_backend(backend)
+    backend = single.resolve_backend(backend, n=n, batch=row.shape[0])
     window_steps = _resolve_window_steps_batched(row, n, window_steps)
     if row_ptr is None:
         row_ptr = batched_row_ptr_from_sorted(row, n)
+    if backend == "pallas_persistent":
+        # Local import: core must stay importable without the kernel package.
+        from repro.kernels.cycle_gain.ops import awac_persistent_loop_batched
+
+        b = row.shape[0]
+        go0 = is_perfect_batched(state, n) if degrade_infeasible \
+            else jnp.ones((b,), bool)
+        mr, mc, u, v, iters = awac_persistent_loop_batched(
+            row, col, val, row_ptr, state.mate_row, state.mate_col, state.u,
+            state.v, min_gain, go0, n=n, window_steps=window_steps,
+            max_iter=max_iter)
+        return MatchState(mr, mc, u, v), iters
     if backend == "xla":
         # Same x64 trace context as single.awac: Step C runs as one
         # packed-key uint64 segment_max over the whole batch (no-op under

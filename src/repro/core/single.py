@@ -409,10 +409,27 @@ def _cwinners(backend, row, col, val, row_ptr, n, state, min_gain,
     raise ValueError(f"unknown AWAC backend {backend!r}")
 
 
-def resolve_backend(backend: str) -> str:
-    """'auto' -> compiled Pallas sweep on TPU, fused XLA path elsewhere."""
+def resolve_backend(backend: str, n: int | None = None,
+                    batch: int | None = None) -> str:
+    """Resolve ``"auto"`` to a concrete local AWAC backend.
+
+    Consults the measured dispatch table (``BENCH_dispatch.json``, written
+    by the kernels bench job — see ``repro.kernels.dispatch``) for the
+    winner on this platform and shape class. Only when no measurement
+    exists for the platform does the old structural heuristic apply
+    (compiled Pallas lowering on TPU, fused XLA elsewhere) — a guess, and
+    labeled as one in the dispatch module docs, never a claim.
+    """
     if backend != "auto":
         return backend
+    try:
+        from repro.kernels.dispatch import choose_backend
+
+        winner = choose_backend(n=n, batch=batch)
+    except ImportError:  # core stays usable without the kernel package
+        winner = None
+    if winner is not None:
+        return winner
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
@@ -484,14 +501,27 @@ def awac(row, col, val, n: int, state: MatchState, max_iter: int = 1000,
          degrade_infeasible: bool = False):
     """Full AWAC loop. Returns (state, iters).
 
-    backend: "auto" | "xla" (fused sweep, default off-TPU) | "pallas"
-    (fused ``awac_sweep`` kernel, default on TPU) | "reference" (seed jnp
-    path, the bit-exactness oracle). All backends produce identical results.
+    backend: "auto" (measured dispatch-table winner, see
+    ``resolve_backend``) | "xla" (fused sweep) | "pallas" (fused
+    ``awac_sweep`` kernel, one launch per iteration) | "pallas_persistent"
+    (whole loop in one persistent kernel) | "reference" (seed jnp path, the
+    bit-exactness oracle). All backends produce identical results and
+    iteration counts.
     """
-    backend = resolve_backend(backend)
+    backend = resolve_backend(backend, n=n)
     window_steps = _resolve_window_steps(row, n, window_steps)
     if row_ptr is None:
         row_ptr = row_ptr_from_sorted(row, n)
+    if backend == "pallas_persistent":
+        # Local import: core must stay importable without the kernel package.
+        from repro.kernels.cycle_gain.ops import awac_persistent_loop
+
+        go0 = is_perfect(state, n) if degrade_infeasible else jnp.array(True)
+        mr, mc, u, v, iters = awac_persistent_loop(
+            row, col, val, row_ptr, state.mate_row, state.mate_col, state.u,
+            state.v, min_gain, go0, n=n, window_steps=window_steps,
+            max_iter=max_iter)
+        return MatchState(mr, mc, u, v), iters
     if backend == "xla":
         # x64-enabled trace context lets Step C run as ONE packed-key uint64
         # segment_max (see repro.sparse.ops); inputs/outputs stay f32/i32.

@@ -131,7 +131,14 @@ def awac_sweep_batched(row, col, val, row_ptr, mate_row, mate_col, u, v,
     [B, n + 1 padded to lanes]; callers slice [:, :n] and map sentinels.
     """
     b, cap = row.shape
-    assert cap % te == 0 and te % 128 == 0, (cap, te)
+    if te % 128 != 0 or te < 128 or cap % te != 0:
+        # a bare assert here was stripped under ``python -O`` and made the
+        # kernel unusable for cap < 128; the wrappers in ops.py auto-select
+        # a legal (te, padded cap) via roofline.plan_edge_tile instead
+        raise ValueError(
+            f"awac_sweep_batched: edge tile te={te} must be a positive "
+            f"multiple of 128 that divides cap={cap} (pad cap or pass "
+            f"te=None to the ops wrappers for automatic tile selection)")
     np_ = pl.cdiv(n + 1, 128) * 128
     nv = pl.cdiv(n + 2, 128) * 128
     grid = (b, cap // te)

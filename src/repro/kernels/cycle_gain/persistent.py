@@ -1,0 +1,269 @@
+"""Persistent whole-iteration Pallas AWAC kernel: the full loop on-chip.
+
+The streamed ``awac_sweep`` kernel fuses Steps A+B+C of ONE sweep, but the
+driver (``core.single._awac_loop`` / ``core.batch.awac_loop``) still runs
+Step D + the convergence check between sweeps on the host side of the
+``pallas_call`` boundary — one kernel launch (and one HBM round-trip of the
+full matching state) per AWAC iteration. This kernel makes the iteration
+loop itself the kernel body: grid ``(B,)``, one grid step per instance, and
+inside it
+
+  - an ``lax.while_loop`` over AWAC iterations whose carry is the matching
+    state (``mate_row``/``mate_col``/``u``/``v``, each a [nv] lane vector),
+    the iteration counter, and the convergence flag — VMEM-resident across
+    the whole loop, never written back until convergence;
+  - per iteration, an ``lax.fori_loop`` over ``cap // te`` edge tiles
+    running the same fused Step A+B+C body as ``awac_sweep`` (windowed
+    binary search, gain, per-column winner accumulation with smallest-row
+    tie-break), with the winner blocks as loop carries;
+  - Steps D + augmentation (``core.single.select_and_augment``) re-expressed
+    on lane vectors: the ``segment_max_with_payload`` over e2-columns
+    becomes a scatter-max + tie-resolving scatter-min (identical max/min-
+    payload semantics), the deterministic single-best-cycle fallback becomes
+    max + first-index-of-max, and the eight augmentation scatters run in the
+    reference's exact order;
+  - the convergence check ``n_surv > 0`` feeding the while condition.
+
+Bit-identity contract: for every instance, (mate_row, mate_col, u, v) after
+the loop AND the iteration count equal ``core.single._awac_loop`` on any
+backend. Gains are computed in the reference's operation order
+(``w1 + w2 - u[i] - v[j]``); every winner/augmentation reduction is an
+order-free max/min or writes duplicate-identical values, so scatter order
+cannot perturb results.
+
+Edge tiles are sized by ``roofline.analysis.plan_edge_tile`` (VMEM budget:
+resident edge copies + state + winner blocks + double-buffered streams);
+see the wrappers in ``ops.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = float("-inf")
+BIG = jnp.iinfo(jnp.int32).max
+
+
+def _kernel(row_ref, col_ref, val_ref, ptr_ref, mr_ref, mc_ref, u_ref, v_ref,
+            mg_ref, go_ref, mro_ref, mco_ref, uo_ref, vo_ref, it_ref, *,
+            n: int, cap: int, te: int, window_steps: int, max_iter: int):
+    r_all = row_ref[0]
+    c_all = col_ref[0]
+    w_all = val_ref[0]
+    ptr = ptr_ref[0]
+    mg = mg_ref[0, 0]
+    nv = mr_ref.shape[-1]
+    n_tiles = cap // te
+    # 1D iota is unsupported on TPU; broadcast on the lane axis and strip
+    jlane = jax.lax.broadcasted_iota(jnp.int32, (1, nv), 1)[0]
+    lane_n = jlane < n
+
+    def sweep(mr, mc, u, v):
+        """Steps A+B+C over all edge tiles — the ``awac_sweep`` kernel body
+        with the winner blocks as fori carries instead of output refs."""
+
+        def tile_body(t, acc):
+            g_cur, r_cur, w1_cur, w2_cur = acc
+            r = jax.lax.dynamic_slice(r_all, (t * te,), (te,))
+            c = jax.lax.dynamic_slice(c_all, (t * te,), (te,))
+            w1 = jax.lax.dynamic_slice(w_all, (t * te,), (te,))
+            # Step A: windowed completion lookup in row m_j's CSR segment
+            qr = jnp.take(mr, jnp.clip(c, 0, n))
+            qc = jnp.take(mc, jnp.clip(r, 0, n))
+            qr_s = jnp.clip(qr, 0, n)
+            lo = jnp.take(ptr, qr_s)
+            hi0 = jnp.where(qr < n, jnp.take(ptr, qr_s + 1), lo)
+            hi = hi0
+            for _ in range(window_steps):
+                mid = (lo + hi) // 2
+                k = jnp.take(c_all, jnp.clip(mid, 0, cap - 1))
+                lt = k < qc
+                lo = jnp.where(lt, mid + 1, lo)
+                hi = jnp.where(lt, hi, mid)
+            found = (lo < hi0) & (
+                jnp.take(c_all, jnp.clip(lo, 0, cap - 1)) == qc)
+            w2 = jnp.where(
+                found, jnp.take(w_all, jnp.clip(lo, 0, cap - 1)), 0.0)
+            # Step B: gain + candidate mask (reference op order)
+            gain = w1 + w2 - jnp.take(u, jnp.clip(r, 0, n)) - jnp.take(
+                v, jnp.clip(c, 0, n))
+            cand = found & (r < n) & (r > qr) & (gain > mg)
+            # Step C: per-column winner accumulation (masked lanes -> slot n)
+            cj = jnp.where(cand, c, n)
+            g2 = g_cur.at[cj].max(jnp.where(cand, gain, NEG))
+            hit = cand & (gain == jnp.take(g2, cj))
+            rc = jnp.full_like(r_cur, BIG).at[cj].min(jnp.where(hit, r, BIG))
+            r2 = jnp.where(g2 > g_cur, rc, jnp.minimum(r_cur, rc))
+            sel = hit & (r == jnp.take(r2, cj))
+            cjs = jnp.where(sel, cj, n)
+            w1_2 = w1_cur.at[cjs].set(jnp.where(sel, w1, 0.0))
+            w2_2 = w2_cur.at[cjs].set(jnp.where(sel, w2, 0.0))
+            return g2, r2, w1_2, w2_2
+
+        init = (jnp.full((nv,), NEG, jnp.float32),
+                jnp.full((nv,), BIG, jnp.int32),
+                jnp.zeros((nv,), jnp.float32),
+                jnp.zeros((nv,), jnp.float32))
+        return jax.lax.fori_loop(0, n_tiles, tile_body, init)
+
+    def select_augment(mr, mc, u, v, Cgain, Crow, Cw1, Cw2):
+        """``core.single.select_and_augment`` on [nv] lane vectors."""
+        rooted = (Cgain > NEG) & lane_n
+        Ci = jnp.where(rooted, Crow, n).astype(jnp.int32)
+        Cw1 = jnp.where(rooted, Cw1, 0.0)
+        Cw2 = jnp.where(rooted, Cw2, 0.0)
+        Ci_s = jnp.clip(Ci, 0, n)
+        # Step D: per-e2-column winner via scatter-max + min-payload
+        # (identical semantics to segment_max_with_payload: max gain wins,
+        # gain ties resolve to the smallest column index)
+        e2 = jnp.where(rooted, jnp.take(mc, Ci_s), n)
+        dgain = jnp.where(rooted, Cgain, NEG)
+        dmax = jnp.full((nv,), NEG, jnp.float32).at[e2].max(dgain)
+        hitd = rooted & (dgain == jnp.take(dmax, e2))
+        dj = jnp.full((nv,), BIG, jnp.int32).at[e2].min(
+            jnp.where(hitd, jlane, BIG))
+        surv_c2 = (dmax > NEG) & (~rooted) & lane_n
+        surv_root = jnp.where(surv_c2, dj, n)
+        ms = jnp.zeros((nv,), jnp.int32).at[surv_root].set(
+            jnp.where(surv_c2, 1, 0))
+        mask_j = (ms > 0) & rooted
+        n_surv = jnp.sum(mask_j.astype(jnp.int32))
+
+        # deterministic fallback: single globally-best cycle. argmax's
+        # first-occurrence rule = smallest lane index attaining the max.
+        bg = jnp.max(jnp.where(rooted, Cgain, NEG))
+        best_j = jnp.min(jnp.where(rooted & (Cgain == bg), jlane, BIG))
+        use_fb = (n_surv == 0) & rooted.any()
+        mask_j = mask_j | ((jlane == best_j) & use_fb)
+        n_surv = n_surv + use_fb.astype(jnp.int32)
+
+        # augmentation: the reference's exact scatter sequence (surviving
+        # cycles are vertex-disjoint, so all real writes are unique; masked
+        # lanes dump duplicate-identical values into slot n)
+        i_ = Ci_s
+        r2v = mr
+        c2v = jnp.take(mc, i_)
+        mj = jnp.where(mask_j, jlane, n)
+        mi = jnp.where(mask_j, i_, n)
+        mr2 = jnp.where(mask_j, r2v, n)
+        mc2 = jnp.where(mask_j, c2v, n)
+        mr_n = mr.at[mj].set(
+            jnp.where(mask_j, i_, jnp.take(mr, mj)).astype(jnp.int32))
+        mr_n = mr_n.at[mc2].set(
+            jnp.where(mask_j, r2v, jnp.take(mr_n, mc2)).astype(jnp.int32))
+        mc_n = mc.at[mi].set(
+            jnp.where(mask_j, jlane, jnp.take(mc, mi)).astype(jnp.int32))
+        mc_n = mc_n.at[mr2].set(
+            jnp.where(mask_j, c2v, jnp.take(mc_n, mr2)).astype(jnp.int32))
+        u_n = u.at[mi].set(jnp.where(mask_j, Cw1, jnp.take(u, mi)))
+        u_n = u_n.at[mr2].set(jnp.where(mask_j, Cw2, jnp.take(u_n, mr2)))
+        v_n = v.at[mj].set(jnp.where(mask_j, Cw1, jnp.take(v, mj)))
+        v_n = v_n.at[mc2].set(jnp.where(mask_j, Cw2, jnp.take(v_n, mc2)))
+        mr_n = mr_n.at[n].set(n)
+        mc_n = mc_n.at[n].set(n)
+        u_n = u_n.at[n].set(0.0)
+        v_n = v_n.at[n].set(0.0)
+        return mr_n, mc_n, u_n, v_n, n_surv
+
+    def body(carry):
+        mr, mc, u, v, it, _ = carry
+        Cg, Cr, Cw1, Cw2 = sweep(mr, mc, u, v)
+        mr, mc, u, v, n_surv = select_augment(mr, mc, u, v, Cg, Cr, Cw1, Cw2)
+        return mr, mc, u, v, it + 1, n_surv > 0
+
+    def cond(carry):
+        return carry[5] & (carry[4] < max_iter)
+
+    mr, mc, u, v, it, _ = jax.lax.while_loop(
+        cond, body,
+        (mr_ref[0], mc_ref[0], u_ref[0], v_ref[0], jnp.int32(0),
+         go_ref[0, 0] > 0))
+    mro_ref[0] = mr
+    mco_ref[0] = mc
+    uo_ref[0] = u
+    vo_ref[0] = v
+    it_ref[0, 0] = it
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "te", "window_steps", "max_iter", "interpret"))
+def awac_persistent(row, col, val, row_ptr, mate_row, mate_col, u, v,
+                    min_gain, go0, *, n: int, te: int, window_steps: int,
+                    max_iter: int, interpret: bool):
+    """Single-instance persistent loop — a B=1 slice of
+    ``awac_persistent_batched`` (one grid, one kernel body)."""
+    mr, mc, uu, vv, it = awac_persistent_batched(
+        row[None], col[None], val[None], row_ptr[None], mate_row[None],
+        mate_col[None], u[None], v[None], min_gain, go0[None],
+        n=n, te=te, window_steps=window_steps, max_iter=max_iter,
+        interpret=interpret)
+    return mr[0], mc[0], uu[0], vv[0], it[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n", "te", "window_steps", "max_iter", "interpret"))
+def awac_persistent_batched(row, col, val, row_ptr, mate_row, mate_col, u, v,
+                            min_gain, go0, *, n: int, te: int,
+                            window_steps: int, max_iter: int,
+                            interpret: bool):
+    """Whole AWAC loop for B instances in ONE ``pallas_call``.
+
+    row/col/val [B, cap] padded lex-sorted COO (cap % te == 0, padding rows
+    == n); row_ptr [B, n + 2]; mate/u/v [B, n + 1]; min_gain f32 scalar;
+    go0 [B] bool — the per-instance round-0 gate (False short-circuits the
+    loop: the infeasible-instance degrade path, matching
+    ``core.batch.awac_loop``'s ``active0``).
+
+    Returns (mate_row, mate_col, u, v, iters): state over [B, n + 1 padded
+    to lanes] plus per-instance iteration counts [B]; callers slice
+    [:, :n + 1]. Bit-identical (state AND counts) to driving
+    ``awac_sweep_batched`` from the host ``while_loop``.
+    """
+    b, cap = row.shape
+    if te % 128 != 0 or te < 128 or cap % te != 0:
+        raise ValueError(
+            f"awac_persistent_batched: edge tile te={te} must be a positive "
+            f"multiple of 128 that divides cap={cap} (pad cap or pass "
+            f"te=None to the ops wrappers for automatic tile selection)")
+    nv = pl.cdiv(n + 2, 128) * 128
+    grid = (b,)
+
+    def lane_pad(x, width, fill):
+        return jnp.full((b, width), fill, x.dtype).at[:, : x.shape[1]].set(x)
+
+    full = lambda width: pl.BlockSpec((1, width), lambda i: (i, 0))  # noqa: E731
+    out = pl.pallas_call(
+        functools.partial(_kernel, n=n, cap=cap, te=te,
+                          window_steps=window_steps, max_iter=max_iter),
+        grid=grid,
+        in_specs=[
+            full(cap), full(cap), full(cap),      # row, col, val (resident)
+            full(nv),                             # row_ptr
+            full(nv), full(nv),                   # mate_row, mate_col
+            full(nv), full(nv),                   # u, v
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),  # min_gain (shared)
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),  # go0 (per instance)
+        ],
+        out_specs=[full(nv)] * 4 + [pl.BlockSpec((1, 1), lambda i: (i, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nv), jnp.int32),
+            jax.ShapeDtypeStruct((b, nv), jnp.int32),
+            jax.ShapeDtypeStruct((b, nv), jnp.float32),
+            jax.ShapeDtypeStruct((b, nv), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        row, col, val,
+        lane_pad(row_ptr, nv, cap),
+        lane_pad(mate_row, nv, n), lane_pad(mate_col, nv, n),
+        lane_pad(u, nv, 0), lane_pad(v, nv, 0),
+        jnp.asarray(min_gain, jnp.float32).reshape(1, 1),
+        go0.astype(jnp.int32).reshape(b, 1),
+    )
+    return out[0], out[1], out[2], out[3], out[4][:, 0]

@@ -21,6 +21,7 @@ V5E = {
     "peak_flops": 197e12,  # bf16 per chip
     "hbm_bw": 819e9,  # B/s
     "ici_bw": 50e9,  # B/s per link
+    "vmem_bytes": 16 * 2**20,  # per-core VMEM (Pallas working-set budget)
 }
 
 _DTYPE_BYTES = {
@@ -32,7 +33,7 @@ _DTYPE_BYTES = {
 _COLL_RE = re.compile(
     r"=\s+(.*?)\s+"
     r"(all-gather|all-reduce|all-to-all|reduce-scatter|collective-permute)"
-    r"(?:-start)?\("
+    r"(-start)?\("
 )
 
 _SHAPE_RE = re.compile(
@@ -52,10 +53,62 @@ def shape_bytes(shape_str: str) -> int:
     return total
 
 
+def _split_tuple_elements(shape_str: str) -> list[str]:
+    """Top-level elements of an HLO tuple shape string, or [] when the
+    string is not a parenthesized tuple. Layout braces ``{1,0}`` and nested
+    tuples are kept intact (commas inside either never split)."""
+    s = shape_str.strip()
+    if not (s.startswith("(") and s.endswith(")")):
+        return []
+    parts, depth, buf = [], 0, []
+    for ch in s[1:-1]:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(buf))
+            buf = []
+        else:
+            buf.append(ch)
+    if buf:
+        parts.append("".join(buf))
+    return [p.strip() for p in parts]
+
+
+def _is_context_scalar(element: str) -> bool:
+    """Async collectives append u32[]/s32[] context scalars to the -start
+    tuple; they carry no payload and must not count as collective bytes."""
+    return re.fullmatch(r"[su]32\[\]\S*", element) is not None
+
+
+def _start_result_bytes(shape_str: str) -> int:
+    """Payload bytes of an async ``-start`` instruction.
+
+    The -start shape is a tuple ``(operand(s), result(s), context...)`` —
+    counting the whole tuple double-counts the payload (operand aliases) and
+    adds the u32[] contexts. Only the result portion (second non-context
+    top-level element; itself possibly a tuple, e.g. all-to-all-start)
+    carries the bytes the link actually moves.
+    """
+    elements = [e for e in _split_tuple_elements(shape_str)
+                if not _is_context_scalar(e)]
+    if not elements:  # not a tuple: count the shape as-is
+        return shape_bytes(shape_str)
+    result = elements[1] if len(elements) >= 2 else elements[0]
+    return shape_bytes(result)
+
+
 def collective_bytes(hlo_text: str) -> dict:
-    """Per-device bytes by collective kind, from the compiled SPMD module
-    (line-based: one HLO instruction per line; result-shape bytes counted;
-    async `-done` halves excluded so starts aren't double-counted)."""
+    """Per-device bytes by collective kind, from the compiled SPMD module.
+
+    Line-based (one HLO instruction per line). Sync collectives count their
+    full result shape (a tuple result, e.g. decomposed all-to-all, sums all
+    elements). Async ``-start`` halves count only the result portion of the
+    start tuple — the operand aliases and u32[] context scalars in
+    ``(operand, result, context...)`` are bookkeeping, not payload — and the
+    ``-done`` halves are excluded entirely so starts aren't double-counted.
+    """
     out = {"all-gather": 0, "all-reduce": 0, "all-to-all": 0,
            "reduce-scatter": 0, "collective-permute": 0}
     counts = dict.fromkeys(out, 0)
@@ -63,8 +116,9 @@ def collective_bytes(hlo_text: str) -> dict:
         m = _COLL_RE.search(line)
         if not m:
             continue
-        shapes, kind = m.group(1), m.group(2)
-        out[kind] += shape_bytes(shapes)
+        shapes, kind, is_start = m.group(1), m.group(2), bool(m.group(3))
+        out[kind] += _start_result_bytes(shapes) if is_start \
+            else shape_bytes(shapes)
         counts[kind] += 1
     return {"bytes": out, "counts": counts, "total": sum(out.values())}
 
@@ -92,6 +146,68 @@ def roofline_terms(flops_per_device: float, bytes_per_device: float,
     dom = max(terms, key=terms.get)
     return Roofline(ct, mt, lt, dom, flops_per_device, bytes_per_device,
                     coll_bytes_per_device)
+
+
+_LANE = 128  # TPU lane width: every Pallas last-dim tile is a multiple
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeTilePlan:
+    """VMEM-budgeted edge tiling for the AWAC sweep kernels.
+
+    ``te``: edge-tile width (multiple of the 128 lane width).
+    ``cap_padded``: edge capacity after padding (a multiple of ``te``, so
+    the kernel grid / in-kernel tile loop divides evenly).
+    ``resident_bytes``: the per-instance VMEM-resident working set (full
+    col/val copies + O(n) state + winner blocks).
+    ``stream_bytes``: the double-buffered per-tile edge streams.
+    ``fits``: resident + stream within the budget (False only for
+    instances too large for single-core VMEM residency — the kernel still
+    runs, but spills; callers may prefer the XLA backend then).
+    """
+
+    te: int
+    cap_padded: int
+    resident_bytes: int
+    stream_bytes: int
+    fits: bool
+
+
+def plan_edge_tile(cap: int, n: int, *, target_te: int = 512,
+                   vmem_limit: int | None = None) -> EdgeTilePlan:
+    """Pick the AWAC sweep edge-tile width from the VMEM roofline.
+
+    Mirrors PR 4's clamp-up policy for ``window_steps``: undersized inputs
+    are padded UP to a legal tile (``cap < 128`` becomes one 128-lane tile)
+    rather than rejected, and the tile shrinks below ``target_te`` only when
+    the double-buffered streams would not fit next to the resident working
+    set (resident col/val dominates, so this matters only near the VMEM
+    roof). All returned sizes satisfy the kernels' divisibility contract:
+    ``te % 128 == 0`` and ``cap_padded % te == 0``.
+    """
+    if cap < 1 or n < 1:
+        raise ValueError(
+            f"roofline.plan_edge_tile: need cap >= 1 and n >= 1, got "
+            f"cap={cap}, n={n}")
+    budget = int(V5E["vmem_bytes"] if vmem_limit is None else vmem_limit)
+    nv = _round_up(n + 2, _LANE)
+    np_ = _round_up(n + 1, _LANE)
+    # full col/val copies (i32 + f32) + ptr/mate_row/mate_col (i32) +
+    # u/v (f32) + the four winner blocks
+    cap_lane = max(_round_up(cap, _LANE), _LANE)
+    resident = cap_lane * 8 + 5 * nv * 4 + 4 * np_ * 4
+    te = max(min(_round_up(target_te, _LANE), cap_lane), _LANE)
+    while te > _LANE and resident + 2 * 3 * te * 4 > budget:
+        te -= _LANE
+    cap_padded = max(_round_up(cap, te), te)
+    stream = 2 * 3 * te * 4
+    return EdgeTilePlan(te=te, cap_padded=cap_padded,
+                        resident_bytes=resident, stream_bytes=stream,
+                        fits=resident + stream <= budget)
 
 
 def useful_flops(arch: str, shape_name: str, mode: str, cfg, shape) -> float:

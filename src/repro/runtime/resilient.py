@@ -261,7 +261,10 @@ def verify_result(problem: _api.MatchingProblem, result: _api.MatchResult,
 # --------------------------------------------------------------------------
 
 
-_LOCAL_CHAIN = ("pallas", "xla", "reference")
+#: most-aggressive to most-conservative: the persistent whole-loop kernel
+#: degrades to the per-sweep kernel, then the fused XLA sweep, then the seed
+#: reference path
+_LOCAL_CHAIN = ("pallas_persistent", "pallas", "xla", "reference")
 
 
 def _local_options(options: _api.SolveOptions,

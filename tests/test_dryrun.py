@@ -55,6 +55,52 @@ def test_collective_bytes_parser():
     assert out["counts"]["all-reduce"] == 2
 
 
+def _fixture(name):
+    import pathlib
+
+    return (pathlib.Path(__file__).parent / "data" / name).read_text()
+
+
+def test_collective_bytes_async_start_tuples():
+    # the -start tuple is (operand, result, u32[] contexts...): only the
+    # result portion is payload — counting the whole tuple double-counts the
+    # operand alias and adds the context scalars — and every -done half is
+    # excluded entirely (its start was already counted)
+    from repro.roofline.analysis import collective_bytes
+
+    out = collective_bytes(_fixture("hlo_async_collectives.txt"))
+    assert out["bytes"]["all-gather"] == 512 * 256 * 4  # not + 64*256*4
+    assert out["bytes"]["all-reduce"] == 1024 * 4  # non-tuple start shape
+    assert out["bytes"]["all-to-all"] == 2 * (1 * 256 * 4)  # result tuple
+    assert out["bytes"]["collective-permute"] == 8 * 512 * 4  # not doubled
+    assert out["counts"] == {"all-gather": 1, "all-reduce": 1,
+                             "all-to-all": 1, "reduce-scatter": 0,
+                             "collective-permute": 1}
+    # degenerate start tuple without a separate result element: count the
+    # single payload element, never the context scalar
+    one = collective_bytes(
+        "  %cps = (f32[8]{0}, u32[]) collective-permute-start(%x)\n")
+    assert one["bytes"]["collective-permute"] == 8 * 4
+
+
+def test_collective_bytes_real_cpu_dump():
+    # dumped HLO from a jit'd shard_map on 8 fake CPU devices (see the
+    # fixture header): one instruction of every kind, incl. the decomposed
+    # sync all-to-all whose TUPLE result must sum all elements
+    from repro.roofline.analysis import collective_bytes
+
+    out = collective_bytes(_fixture("hlo_cpu_collectives.txt"))
+    assert out["bytes"]["all-gather"] == 2 * 8 * 512 * 4
+    assert out["bytes"]["all-reduce"] == 4 * 256 * 4
+    assert out["bytes"]["all-to-all"] == 4 * (1 * 256 * 4)
+    assert out["bytes"]["reduce-scatter"] == 1 * 256 * 4
+    assert out["bytes"]["collective-permute"] == 8 * 512 * 4
+    # operand references like "%all-to-all.2" inside get-tuple-element /
+    # fusion lines must not count as instructions
+    assert all(c == 1 for c in out["counts"].values())
+    assert out["total"] == sum(out["bytes"].values())
+
+
 def test_useful_flops_sane():
     from repro.configs import get_config
     from repro.configs.base import shapes_for
