@@ -3,8 +3,8 @@ Jonker-Volgenant). Paper claims: optimum on 10/16 matrices, avg 98.66%
 (min 86%, max 100%) on an extended >=100-matrix suite."""
 import numpy as np
 
-from repro.core import MatchingProblem, graph, ref, solve
 from benchmarks._util import row, time_call
+from repro.core import MatchingProblem, graph, ref, solve
 
 
 def run(n_matrices=100, n=120, verbose=False):

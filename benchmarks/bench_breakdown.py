@@ -1,8 +1,8 @@
 """Paper Fig 6.4: AWPM phase breakdown (maximal / MCM / AWAC)."""
 import jax.numpy as jnp
 
-from repro.core import graph, single
 from benchmarks._util import row, time_call
+from repro.core import graph, single
 
 
 def run(n=1024, deg=8.0):

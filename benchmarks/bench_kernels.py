@@ -5,16 +5,16 @@ the end-to-end AWAC iterations/sec contest between the seed implementation
 and the fused sparse sweep engine (DESIGN.md §3)."""
 import datetime
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from benchmarks._util import row, time_call
 from repro.kernels import dispatch as kdispatch
 from repro.kernels.backend import resolve_execution
 from repro.kernels.cycle_gain import cycle_gain_padded, cycle_gain_ref
 from repro.kernels.embedding_bag import embedding_bag_padded, embedding_bag_ref
 from repro.kernels.flash_attention import attention_ref, flash_attention
-from benchmarks._util import row, time_call
 
 
 def _mode_note(backend: str) -> str:

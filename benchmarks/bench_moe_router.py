@@ -1,11 +1,11 @@
 """Beyond paper: AWPM MoE router vs top-k baseline — load balance (CV of
 per-expert load, drop rate) and routing quality (mean selected affinity)."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.models.moe import awpm_route, balanced_assign, swap_improve, topk_route
 from benchmarks._util import row, time_call
+from repro.models.moe import awpm_route, balanced_assign, swap_improve, topk_route
 
 
 def run(t=1024, e=16, k=2, seed=0):

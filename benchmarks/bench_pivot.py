@@ -2,8 +2,8 @@
 pivot-free LU after AWPM vs exact-MWPM vs identity permutation."""
 import numpy as np
 
+from benchmarks._util import row
 from repro.core import MatchingProblem, graph, pivot, ref, solve
-from benchmarks._util import row, time_call
 
 
 def _system(n, seed):

@@ -21,8 +21,8 @@ import sys
 
 import numpy as np
 
-from repro.core import MatchingProblem, graph, solve
 from benchmarks._util import row, time_call
+from repro.core import MatchingProblem, graph, solve
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
 

@@ -1,0 +1,183 @@
+"""Serving-tier benchmark (DESIGN.md §11): open-loop load + the
+warm-vs-cold differential, persisted to ``BENCH_serving.json``.
+
+Two measurements:
+
+  1. **Open-loop stream** — ``repro.serving.loadgen`` drives a
+     ``MatchingService`` with Poisson arrivals of perturbed repeat
+     instances (the paper's motivating pivot-order stream). Rows:
+     ``serving_throughput`` (served requests/s over the stream span) and
+     ``serving_latency`` (p50/p95/p99, queueing + measured solve). The
+     stream runs twice; the first pass is the compile warm-up (both the
+     cold and warm lanes of the hot class compile there), only the second
+     is reported — a serving process compiles once per class per life,
+     not per stream.
+  2. **Warm-vs-cold differential** — the acceptance story: on a batch of
+     weight-perturbed repeats, ``matcher(p, warm_start=prev)`` must beat
+     the cold ``matcher(p)`` (``serving_warm_vs_cold``: measured speedup,
+     AWAC round counts, weight ratio), and a warm start from the
+     problem's own converged mates must return bit-identically
+     (``warm_identical=True`` — gated by ``check_regression.py`` like
+     every other correctness flag).
+
+Plus ``serving_plan_cache``: LRU hit/miss counters from the stream and
+the measured cost of one cache hit vs the plan-and-compile a miss pays.
+
+Standalone (the CI serving job): ``python benchmarks/bench_serving.py
+[--quick]``. Also wired into ``benchmarks.run`` as suite "serving".
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+import time
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+if str(REPO_ROOT / "src") not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT / "src"))
+
+import jax
+import numpy as np
+
+from benchmarks._util import row
+from repro.core import api, graph
+from repro.serving import MatchingService, ServiceConfig
+from repro.serving.loadgen import StreamSpec, run_stream
+
+
+def _perturb_weights(problem: api.MatchingProblem, n: int, jitter: float,
+                     seed: int) -> api.MatchingProblem:
+    """Same structure, jittered positive weights (a repeat timestep)."""
+    rng = np.random.default_rng(seed)
+    val = np.asarray(problem.val).copy()
+    real = np.asarray(problem.row) < n
+    val[real] = np.abs(
+        val[real] * (1.0 + jitter * rng.standard_normal(int(real.sum())))
+    ).astype(np.float32)
+    return api.MatchingProblem(row=problem.row, col=problem.col, val=val,
+                               n=n)
+
+
+def _time_solve(fn, iters: int) -> float:
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+        jax.block_until_ready((out.mate_row, out.mate_col))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _bench_stream(quick: bool) -> None:
+    spec = StreamSpec(
+        requests=160 if quick else 640,
+        users=8 if quick else 16,
+        n=48, avg_degree=5.0,
+        rate_rps=300.0 if quick else 600.0,
+        weight_jitter=0.03, structure_churn=0.1, seed=0)
+    config = ServiceConfig(num_shards=4, deadline_s=0.002, max_batch=8)
+    # compile warm-up: one throwaway stream on a fresh service populates
+    # the jit caches for this class's cold AND warm lanes (module-level
+    # jax caches survive the service object)
+    warmup = StreamSpec(requests=4 * config.max_batch, users=4,
+                        n=spec.n, avg_degree=spec.avg_degree,
+                        rate_rps=spec.rate_rps, weight_jitter=0.03, seed=1)
+    run_stream(MatchingService(config), warmup)
+
+    service = MatchingService(config)
+    s = run_stream(service, spec)
+    warm_frac = s["served_warm"] / max(s["served"], 1)
+    row("serving_throughput", 1e6 / max(s["throughput_rps"], 1e-9),
+        f"throughput_rps={s['throughput_rps']:.1f} served={s['served']} "
+        f"offered_rps={spec.rate_rps:.0f} warm_frac={warm_frac:.2f} "
+        f"mean_fill={s['mean_fill']:.2f} degraded={s['degraded']}")
+    row("serving_latency", s["p50_us"],
+        f"p50_us={s['p50_us']:.0f} p95_us={s['p95_us']:.0f} "
+        f"p99_us={s['p99_us']:.0f} deadline_us="
+        f"{config.deadline_s * 1e6:.0f} "
+        f"mean_solve_us={s['mean_solve_us']:.0f}")
+
+    stats = service.stats()
+    # cache-hit lookup vs the plan a miss pays (compile excluded: it
+    # lands on the first *call*, already counted in the stream latency)
+    cls_key = service.plans.keys()[-1]
+    t0 = time.perf_counter()
+    for _ in range(100):
+        service.plans.get(cls_key, lambda: None)
+    hit_us = (time.perf_counter() - t0) / 100 * 1e6
+    t0 = time.perf_counter()
+    api.plan(api.ProblemSpec(n=cls_key[0], cap=cls_key[1],
+                             batch=cls_key[2]))
+    plan_us = (time.perf_counter() - t0) * 1e6
+    pc = stats["plan_cache"]
+    row("serving_plan_cache", hit_us,
+        f"hits={pc['hits']} misses={pc['misses']} "
+        f"evictions={pc['evictions']} plan_us={plan_us:.0f} "
+        f"warm_seeds_served={stats['warm_cache']['served']}")
+
+
+def _bench_warm_vs_cold(quick: bool) -> None:
+    n, batch = (64, 8) if quick else (128, 8)
+    bases = [graph.generate(n, 6.0, kind="uniform", seed=u)
+             for u in range(batch)]
+    p1 = api.MatchingProblem.stack(bases)
+    matcher = api.plan(api.ProblemSpec(n=n, cap=p1.cap, batch=batch))
+    r1 = matcher(p1)  # the "previous timestep" matching
+    seed = (np.asarray(r1.mate_row), np.asarray(r1.mate_col))
+    p2 = _perturb_weights(p1, n, jitter=0.03, seed=1)
+    # compile both lanes before timing
+    jax.block_until_ready(matcher(p2).mate_row)
+    jax.block_until_ready(matcher(p2, warm_start=seed).mate_row)
+    iters = 10 if quick else 30
+    cold_us = _time_solve(lambda: matcher(p2), iters)
+    warm_us = _time_solve(lambda: matcher(p2, warm_start=seed), iters)
+    rc = matcher(p2)
+    rw = matcher(p2, warm_start=seed)
+    # bit-identity: warm-starting a problem from its OWN converged mates
+    # must return them unchanged (the seed is an AWAC fixed point)
+    rid = matcher(p2, warm_start=(np.asarray(rc.mate_row),
+                                  np.asarray(rc.mate_col)))
+    identical = bool(
+        np.array_equal(np.asarray(rid.mate_row), np.asarray(rc.mate_row))
+        and np.array_equal(np.asarray(rid.mate_col),
+                           np.asarray(rc.mate_col))
+        and np.allclose(np.asarray(rid.weight), np.asarray(rc.weight)))
+    wc = float(np.asarray(rc.weight).sum())
+    ww = float(np.asarray(rw.weight).sum())
+    row("serving_warm_vs_cold", warm_us,
+        f"cold_us={cold_us:.0f} speedup={cold_us / warm_us:.2f} "
+        f"warm_identical={identical} "
+        f"weight_ratio={ww / wc:.4f} "
+        f"iters_cold={int(np.asarray(rc.awac_iters).sum())} "
+        f"iters_warm={int(np.asarray(rw.awac_iters).sum())} "
+        f"perfect={bool(np.asarray(rw.perfect).all())}")
+
+
+def run(quick: bool = False) -> None:
+    _bench_warm_vs_cold(quick)
+    _bench_stream(quick)
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI sizing: smaller stream, fewer timing iters")
+    ap.add_argument("--no-persist", action="store_true",
+                    help="skip writing BENCH_serving.json")
+    args = ap.parse_args(argv)
+    from benchmarks import run as _run
+    from benchmarks._util import drain_rows
+
+    print("name,us_per_call,derived")
+    drain_rows()
+    t0 = time.perf_counter()
+    run(quick=args.quick)
+    if not args.no_persist:
+        _run._persist("serving", drain_rows(), time.perf_counter() - t0,
+                      ok=True, full=not args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -39,7 +39,7 @@ import sys
 
 IDENT_RE = re.compile(
     r"(weights?_identical|identical_to_batched|identical_to_local"
-    r"|identical_to_reference|certified_sound)=(True|False)")
+    r"|identical_to_reference|certified_sound|warm_identical)=(True|False)")
 
 
 def _rows(path: str) -> dict[str, dict]:
@@ -109,40 +109,131 @@ def check_dispatch(committed: dict[str, dict], fresh: dict[str, dict],
     return failures
 
 
+def _derived_value(derived: str, key: str) -> float | None:
+    m = re.search(rf"\b{re.escape(key)}=([0-9.eE+-]+)", derived or "")
+    try:
+        return float(m.group(1)) if m else None
+    except ValueError:
+        return None
+
+
+def check_serving(rows: dict[str, dict], min_rps: float, max_p99_us: float,
+                  min_speedup: float) -> list[str]:
+    """Absolute SLO gates for a fresh ``BENCH_serving.json`` (fourth,
+    optional check — ``--serving FRESH``).
+
+    Unlike the baseline-relative throughput gate, serving is gated on
+    *absolute* floors/ceilings: the stream runs on a simulated arrival
+    clock, so its numbers are dominated by the configured load plus the
+    measured solve walls, and an absolute bound catches the real
+    failure modes (compile-per-request, a stalled batcher, warm path
+    slower than cold) without flaking on runner-to-runner speed spread.
+    The ``warm_identical`` correctness flag is enforced by the shared
+    flag scan in :func:`check`; here it is enforced even WITHOUT a
+    baseline (a fresh-only run must not skip it)."""
+    failures = []
+    for name in ("serving_throughput", "serving_latency",
+                 "serving_warm_vs_cold"):
+        if name not in rows:
+            failures.append(f"serving: required row {name!r} is missing")
+    for name, r in sorted(rows.items()):
+        for key, ok in _ident_flags(r.get("derived", "")):
+            if not ok:
+                failures.append(
+                    f"{name}: correctness flag {key} is False "
+                    f"(derived={r['derived']!r})")
+    r = rows.get("serving_throughput")
+    if r is not None:
+        rps = _derived_value(r.get("derived", ""), "throughput_rps")
+        if rps is None:
+            failures.append("serving_throughput: no throughput_rps in "
+                            f"derived ({r.get('derived')!r})")
+        elif rps < min_rps:
+            failures.append(
+                f"serving_throughput: {rps:.1f} rps under the "
+                f"{min_rps:.1f} rps floor")
+    r = rows.get("serving_latency")
+    if r is not None:
+        p99 = _derived_value(r.get("derived", ""), "p99_us")
+        if p99 is None:
+            failures.append("serving_latency: no p99_us in derived "
+                            f"({r.get('derived')!r})")
+        elif p99 > max_p99_us:
+            failures.append(
+                f"serving_latency: p99 {p99:.0f}us over the "
+                f"{max_p99_us:.0f}us ceiling")
+    r = rows.get("serving_warm_vs_cold")
+    if r is not None:
+        speedup = _derived_value(r.get("derived", ""), "speedup")
+        if speedup is None:
+            failures.append("serving_warm_vs_cold: no speedup in derived "
+                            f"({r.get('derived')!r})")
+        elif speedup < min_speedup:
+            failures.append(
+                f"serving_warm_vs_cold: warm-start speedup {speedup:.2f}x "
+                f"under the {min_speedup:.2f}x floor (warm rematching must "
+                f"beat cold solve on perturbed repeats)")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", required=True)
-    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--baseline")
+    ap.add_argument("--fresh")
     ap.add_argument("--factor", type=float, default=2.5)
     ap.add_argument("--dispatch", nargs=2,
                     metavar=("COMMITTED", "FRESH"),
                     help="gate the committed dispatch table against a "
                          "freshly measured one")
     ap.add_argument("--dispatch-factor", type=float, default=1.2)
+    ap.add_argument("--serving", metavar="FRESH",
+                    help="gate a fresh BENCH_serving.json on absolute "
+                         "SLOs (throughput floor, p99 ceiling, warm-start "
+                         "speedup floor + bit-identity flag)")
+    ap.add_argument("--serving-min-rps", type=float, default=20.0)
+    ap.add_argument("--serving-max-p99-us", type=float, default=250_000.0)
+    ap.add_argument("--serving-min-speedup", type=float, default=1.05)
     args = ap.parse_args()
-    baseline, fresh = _rows(args.baseline), _rows(args.fresh)
-    only_b = sorted(set(baseline) - set(fresh))
-    only_f = sorted(set(fresh) - set(baseline))
-    if only_b:
-        print(f"# rows only in baseline (ignored): {only_b}")
-    if only_f:
-        print(f"# new rows (not gated yet): {only_f}")
-    failures = check(baseline, fresh, args.factor)
+    if bool(args.baseline) != bool(args.fresh):
+        ap.error("--baseline and --fresh go together")
+    if not args.baseline and not args.serving:
+        ap.error("nothing to do: pass --baseline/--fresh and/or --serving")
+    failures = []
+    n = 0
+    if args.baseline:
+        baseline, fresh = _rows(args.baseline), _rows(args.fresh)
+        only_b = sorted(set(baseline) - set(fresh))
+        only_f = sorted(set(fresh) - set(baseline))
+        if only_b:
+            print(f"# rows only in baseline (ignored): {only_b}")
+        if only_f:
+            print(f"# new rows (not gated yet): {only_f}")
+        n = len(set(baseline) & set(fresh))
+        failures += check(baseline, fresh, args.factor)
     if args.dispatch:
         failures += check_dispatch(
             _dispatch_entries(args.dispatch[0]),
             _dispatch_entries(args.dispatch[1]), args.dispatch_factor)
+    if args.serving:
+        failures += check_serving(
+            _rows(args.serving), args.serving_min_rps,
+            args.serving_max_p99_us, args.serving_min_speedup)
     for msg in failures:
         print(f"FAIL {msg}")
-    n = len(set(baseline) & set(fresh))
     if failures:
         sys.exit(1)
-    extra = ""
+    parts = []
+    if args.baseline:
+        parts.append(f"{n} shared rows within {args.factor}x, all "
+                     f"correctness flags True")
     if args.dispatch:
-        extra = (f", dispatch winners within {args.dispatch_factor}x of "
-                 f"fresh best")
-    print(f"# regression gate OK: {n} shared rows within {args.factor}x, "
-          f"all correctness flags True{extra}")
+        parts.append(f"dispatch winners within {args.dispatch_factor}x of "
+                     f"fresh best")
+    if args.serving:
+        parts.append(f"serving SLOs met (>= {args.serving_min_rps:.0f} rps, "
+                     f"p99 <= {args.serving_max_p99_us:.0f}us, warm >= "
+                     f"{args.serving_min_speedup:.2f}x)")
+    print(f"# regression gate OK: {'; '.join(parts)}")
 
 
 if __name__ == "__main__":

@@ -40,7 +40,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names (approx_ratio, scaling, "
-                         "breakdown, pivot, moe_router, kernels)")
+                         "breakdown, pivot, moe_router, kernels, serving)")
     ap.add_argument("--full", action="store_true",
                     help="larger problem sizes (slower)")
     ap.add_argument("--no-persist", action="store_true",
@@ -49,7 +49,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_approx_ratio, bench_breakdown, bench_kernels, bench_moe_router,
-        bench_pivot, bench_scaling,
+        bench_pivot, bench_scaling, bench_serving,
     )
     from benchmarks._util import drain_rows
 
@@ -61,6 +61,7 @@ def main() -> None:
         "pivot": bench_pivot.run,
         "moe_router": bench_moe_router.run,
         "kernels": bench_kernels.run,
+        "serving": lambda: bench_serving.run(quick=not args.full),
     }
     selected = (args.only.split(",") if args.only else list(benches))
     unknown = [s for s in selected if s not in benches]

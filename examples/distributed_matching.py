@@ -10,12 +10,10 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=16")
 
-import numpy as np  # noqa: E402
 import jax  # noqa: E402
+import numpy as np  # noqa: E402
 
-from repro.core import (  # noqa: E402
-    MatchingProblem, SolveOptions, graph, plan, ref, solve,
-)
+from repro.core import MatchingProblem, SolveOptions, graph, plan, ref, solve  # noqa: E402
 from repro.core.dist import make_mesh  # noqa: E402
 
 

@@ -4,9 +4,9 @@
 """
 import time
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_defs

@@ -9,8 +9,8 @@ import argparse
 
 import jax
 
-from repro.configs.base import LMConfig, MoECfg
 from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import LMConfig, MoECfg
 from repro.data.tokens import TokenPipeline
 from repro.models import build_defs, build_loss
 from repro.models.param import count_params, init_params

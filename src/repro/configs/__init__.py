@@ -4,7 +4,12 @@ from __future__ import annotations
 import importlib
 
 from repro.configs.base import (
-    GNNConfig, LMConfig, MatchingConfig, MoECfg, RecSysConfig, ShapeSpec,
+    GNNConfig,
+    LMConfig,
+    MatchingConfig,
+    MoECfg,
+    RecSysConfig,
+    ShapeSpec,
     shapes_for,
 )
 

@@ -2,8 +2,6 @@
 d_ff(expert)=1408 vocab=151936, 60 routed top-4 + 4 shared (gated).
 ``router`` selects the paper-faithful top-k baseline or the AWPM router
 (the paper's matching technique; DESIGN.md §4)."""
-import dataclasses
-
 from repro.configs.base import LMConfig, MoECfg
 
 

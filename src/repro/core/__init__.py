@@ -22,11 +22,7 @@ from repro.core.api import (
 from repro.core.constants import MIN_GAIN
 from repro.core.dual import DualCertificate, certify, dual_certificate
 from repro.core.graph import BipartiteGraph, from_coo, generate, matrix_suite
-from repro.core.preflight import (
-    InfeasibleProblemError,
-    PreflightError,
-    PreflightReport,
-)
+from repro.core.preflight import InfeasibleProblemError, PreflightError, PreflightReport
 
 __all__ = [
     "api",

@@ -48,6 +48,7 @@ import math
 from typing import Any, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import batch as _batch
@@ -403,6 +404,9 @@ class ExecutionInfo:
     backend: str
     source: str
     ran_interpreted: bool | None = None
+    #: True when the solve was seeded from previous mates (warm-start
+    #: rematching) instead of running greedy + MCM from scratch.
+    warm_started: bool = False
 
 
 @jax.tree_util.register_pytree_node_class
@@ -556,38 +560,103 @@ def _execution_info(problem: MatchingProblem,
                          ran_interpreted=interpreted)
 
 
+def _warm_mates(problem: MatchingProblem, warm_start):
+    """Normalize a warm-start seed to (mate_row, mate_col) arrays matching
+    the problem's batchedness ([n]/[n + 1] for a single instance, leading B
+    for a batch). Accepts a previous :class:`MatchResult` or a
+    (mate_row, mate_col) pair. A seed whose shape cannot belong to this
+    problem raises ValueError — the serving tier catches that and falls
+    back to the cold path; entry *values* are never validated here (the
+    engine-side repair unmatches every stale/garbage pair)."""
+    if isinstance(warm_start, MatchResult):
+        mr, mc = warm_start.mate_row, warm_start.mate_col
+    elif isinstance(warm_start, (tuple, list)) and len(warm_start) == 2:
+        mr, mc = warm_start
+    else:
+        raise TypeError(
+            f"warm_start must be a MatchResult or a (mate_row, mate_col) "
+            f"pair, got {type(warm_start).__name__}")
+    n = problem.n
+    shp = np.shape(mr)
+    if np.shape(mc) != shp:
+        raise ValueError(
+            f"warm_start mate arrays disagree: {shp} vs {np.shape(mc)}")
+    if problem.is_batched:
+        want = [(problem.batch_size, n), (problem.batch_size, n + 1)]
+    else:
+        want = [(n,), (n + 1,)]
+    if shp not in want:
+        raise ValueError(
+            f"warm_start shape {shp} does not fit the problem (expected "
+            f"one of {want}; stale seeds from a different n/batch must be "
+            f"discarded, not repaired)")
+    return mr, mc
+
+
 def solve(problem: MatchingProblem,
-          options: SolveOptions | None = None) -> MatchResult:
+          options: SolveOptions | None = None, *,
+          warm_start=None) -> MatchResult:
     """Run the full AWPM pipeline (greedy maximal -> MCM -> AWAC) on
     ``problem``, dispatching on its shape and ``options.grid`` (see the
     module docstring table). Returns a :class:`MatchResult`; bit-identical
-    per instance on every route and backend."""
+    per instance on every route and backend.
+
+    ``warm_start`` (a previous :class:`MatchResult` or a (mate_row,
+    mate_col) pair) seeds the pipeline from an earlier matching instead of
+    greedy + MCM from scratch: stale pairs are repaired against the current
+    edge list, a bounded MCM top-up closes any seed deficiency, and AWAC
+    runs from there (DESIGN.md §11). Seeding never changes the contract —
+    the result is a perfect matching of THIS problem — and a seed that is
+    already an AWAC fixed point of the same problem is returned
+    bit-identically."""
     options = SolveOptions() if options is None else options
     _check_types(problem, options)
+    warm = None if warm_start is None else _warm_mates(problem, warm_start)
     problem, report = _apply_preflight(problem, options)
     if options.grid is not None:
-        result = _solve_dist(problem, options)
+        result = _solve_dist(problem, options, warm=warm)
     elif problem.is_batched:
-        state, iters = _batch._awpm_batched(
-            problem.row, problem.col, problem.val, problem.n,
-            max_iter=options.max_iter, min_gain=options.min_gain,
-            backend=options.backend, window_steps=options.window_steps,
-            degrade_infeasible=True)
+        if warm is None:
+            state, iters = _batch._awpm_batched(
+                problem.row, problem.col, problem.val, problem.n,
+                max_iter=options.max_iter, min_gain=options.min_gain,
+                backend=options.backend, window_steps=options.window_steps,
+                degrade_infeasible=True)
+        else:
+            state, iters = _batch._awpm_batched_from_state(
+                problem.row, problem.col, problem.val, problem.n,
+                warm[0], warm[1], max_iter=options.max_iter,
+                min_gain=options.min_gain, backend=options.backend,
+                window_steps=options.window_steps, degrade_infeasible=True)
         result = _result(state, iters, problem.n, batched=True)
     else:
-        state, iters = _single._awpm(
-            problem.row, problem.col, problem.val, problem.n,
-            max_iter=options.max_iter, min_gain=options.min_gain,
-            backend=options.backend, window_steps=options.window_steps,
-            degrade_infeasible=True)
+        if warm is None:
+            state, iters = _single._awpm(
+                problem.row, problem.col, problem.val, problem.n,
+                max_iter=options.max_iter, min_gain=options.min_gain,
+                backend=options.backend, window_steps=options.window_steps,
+                degrade_infeasible=True)
+        else:
+            # lift to B=1: the batched engine is pinned bit-identical per
+            # instance to the single-instance one, so the lift is purely
+            # a code-path economy (one warm engine, not two)
+            wmr, wmc = (jnp.asarray(x)[None] for x in warm)
+            bstate, biters = _batch._awpm_batched_from_state(
+                problem.row[None], problem.col[None], problem.val[None],
+                problem.n, wmr, wmc, max_iter=options.max_iter,
+                min_gain=options.min_gain, backend=options.backend,
+                window_steps=options.window_steps, degrade_infeasible=True)
+            state = MatchState(*(x[0] for x in bstate))
+            iters = biters[0]
         result = _result(state, iters, problem.n, batched=False)
     result = dataclasses.replace(
-        result, execution=_execution_info(problem, options))
+        result, execution=dataclasses.replace(
+            _execution_info(problem, options), warm_started=warm is not None))
     return _finish(problem, result, options, report)
 
 
 def _solve_dist(problem: MatchingProblem, options: SolveOptions,
-                driver=None) -> MatchResult:
+                driver=None, warm=None) -> MatchResult:
     """Grid dispatch: one distributed-batched shard_map dispatch (a single
     instance is lifted to B=1 — still bit-identical, the batched engine is
     pinned per instance to the single-instance one)."""
@@ -605,6 +674,28 @@ def _solve_dist(problem: MatchingProblem, options: SolveOptions,
     batched = problem.is_batched
     if not batched:
         row, col, val = row[None], col[None], val[None]
+    state0 = None
+    if warm is not None:
+        # warm start on a grid: the cheap host-side phases (seed repair +
+        # MCM top-up + dual build) run on the local batched engine, then
+        # ONE distributed dispatch runs the AWAC phase from that state
+        # (the driver's from_state entry, DESIGN.md §5)
+        from repro.sparse.csr import batched_row_ptr_from_sorted
+
+        wmr, wmc = warm
+        if not batched:
+            wmr, wmc = jnp.asarray(wmr)[None], jnp.asarray(wmc)[None]
+        jrow, jcol, jval = jnp.asarray(row), jnp.asarray(col), \
+            jnp.asarray(val)
+        ws = _batch._resolve_window_steps_batched(
+            jrow, problem.n, options.window_steps)
+        row_ptr = batched_row_ptr_from_sorted(jrow, problem.n)
+        wmr, wmc = _batch._normalize_mates_batched(
+            wmr, wmc, row.shape[0], problem.n)
+        wmr, wmc = _batch.warm_mates_batched(
+            jrow, jcol, jval, row_ptr, problem.n, wmr, wmc, ws)
+        state0 = _batch._state_from_mates_windowed(
+            jrow, jcol, jval, row_ptr, problem.n, wmr, wmc, ws)
     if driver is None:
         driver = _dist._DistBatchedAWPM(
             options.grid, problem.n, cap=options.cap,
@@ -614,7 +705,7 @@ def _solve_dist(problem: MatchingProblem, options: SolveOptions,
             window_steps=options.window_steps,
             degrade_infeasible=True,
             exchange_check=options.exchange_check)
-    state, iters, aux = driver.run(row, col, val)
+    state, iters, aux = driver.run(row, col, val, state=state0)
     aux = np.asarray(aux)
     # with exchange_check the engine psums a [dropped, integrity] pair per
     # run; otherwise aux is the plain global dropped counter
@@ -736,13 +827,21 @@ class Matcher:
                 f"(the plan is shape-specialized; re-plan() or pad to the "
                 f"planned capacity)")
 
-    def __call__(self, problem: MatchingProblem) -> MatchResult:
+    def __call__(self, problem: MatchingProblem,
+                 warm_start=None) -> MatchResult:
         self._check(problem)
         opts = self.options
         if self._driver is not None:
+            warm = None if warm_start is None \
+                else _warm_mates(problem, warm_start)
             problem, report = _apply_preflight(problem, opts)
             try:
-                result = _solve_dist(problem, opts, driver=self._driver)
+                result = _solve_dist(problem, opts, driver=self._driver,
+                                     warm=warm)
+                if result.execution is not None:
+                    result = dataclasses.replace(
+                        result, execution=dataclasses.replace(
+                            result.execution, warm_started=warm is not None))
                 return _finish(problem, result, opts, report)
             except ValueError as e:
                 if "refusing to truncate" not in str(e):
@@ -756,7 +855,7 @@ class Matcher:
                     f"a denser prototype, or pass SolveOptions(cap=...) "
                     f"with headroom for the serving workload.") from e
         pinned = dataclasses.replace(opts, window_steps=self._window_steps)
-        return solve(problem, pinned)
+        return solve(problem, pinned, warm_start=warm_start)
 
     def __repr__(self):
         mode = "local" if self._driver is None else (

@@ -35,7 +35,7 @@ import numpy as np
 
 from repro.core import single
 from repro.core._compat import warn_legacy
-from repro.core.single import MIN_GAIN, MatchState, NEG
+from repro.core.single import MIN_GAIN, NEG, MatchState
 from repro.sparse.csr import batched_row_ptr_from_sorted
 from repro.sparse.ops import (
     batched_searchsorted_in_window,
@@ -575,6 +575,103 @@ def awac_batched(row, col, val, n: int, state: MatchState,
     return _awac_loop_batched(row, col, val, row_ptr, n, state, max_iter,
                               min_gain, backend, window_steps,
                               degrade_infeasible)
+
+
+# --------------------------------------------------------------------------
+# Warm-start rematching: seed the pipeline from previous mate arrays
+# --------------------------------------------------------------------------
+
+
+def _normalize_mates_batched(mate_row, mate_col, b: int, n: int):
+    """Accept seed mates of shape [B, n] or [B, n + 1] (numpy or jnp, any
+    int dtype) and return int32 [B, n + 1] arrays with the sentinel slot
+    pinned. Shape mismatches raise ValueError — the caller decides whether
+    that means \"fall back to cold\" (serving) or \"user error\" (api)."""
+    mate_row = jnp.asarray(mate_row, jnp.int32)
+    mate_col = jnp.asarray(mate_col, jnp.int32)
+    if mate_row.shape != mate_col.shape:
+        raise ValueError(
+            f"warm-start mate arrays disagree: mate_row {mate_row.shape} vs "
+            f"mate_col {mate_col.shape}")
+    if mate_row.shape == (b, n):
+        pad = jnp.full((b, 1), n, jnp.int32)
+        mate_row = jnp.concatenate([mate_row, pad], axis=1)
+        mate_col = jnp.concatenate([mate_col, pad], axis=1)
+    elif mate_row.shape != (b, n + 1):
+        raise ValueError(
+            f"warm-start mate arrays must be [B, n] or [B, n + 1] = "
+            f"[{b}, {n + 1}], got {mate_row.shape}")
+    return (mate_row.at[:, n].set(n), mate_col.at[:, n].set(n))
+
+
+@functools.partial(jax.jit, static_argnames=("n", "window_steps"))
+def repair_mates_batched(row, col, val, row_ptr, n: int, mate_row, mate_col,
+                         window_steps: int):
+    """Repair seed mates against the CURRENT edge lists: a claimed pair
+    (i, j) survives only if it is mutual (``mate_col[i] == j``) and the
+    edge still exists in the instance (CSR-windowed membership probe). Any
+    out-of-range, one-sided, or structurally-stale entry is unmatched on
+    both sides, so the output is always a partial matching on existing
+    edges — whatever garbage the seed carried. Returns (mate_row,
+    mate_col), int32 [B, n + 1]."""
+    b = row.shape[0]
+    jvec = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (b, n))
+    mr = mate_row[:, :n]
+    valid = (mr >= 0) & (mr < n)
+    i_s = jnp.clip(mr, 0, n)
+    lo = jnp.take_along_axis(row_ptr, i_s, axis=1)
+    hi = jnp.where(valid, jnp.take_along_axis(row_ptr, i_s + 1, axis=1), lo)
+    _, found = batched_searchsorted_in_window(col, jvec, lo, hi,
+                                              n_steps=window_steps)
+    mutual = valid & (jnp.take_along_axis(mate_col, i_s, axis=1) == jvec)
+    keep = mutual & found
+    bidx = jnp.arange(b)[:, None]
+    new_mr = jnp.full((b, n + 1), n, jnp.int32).at[:, :n].set(
+        jnp.where(keep, mr, n))
+    new_mc = jnp.full((b, n + 1), n, jnp.int32).at[
+        bidx, jnp.where(keep, i_s, n)].set(jnp.where(keep, jvec, n))
+    return new_mr.at[:, n].set(n), new_mc.at[:, n].set(n)
+
+
+def warm_mates_batched(row, col, val, row_ptr, n: int, mate_row, mate_col,
+                       window_steps: int):
+    """Repaired seed + bounded MCM top-up: the warm-start replacement for
+    the greedy + MCM cold phases. The top-up is the pipeline's own batched
+    MCM, whose phase loop is bounded by the seed deficiency (each phase
+    either matches a free row or stops) — an intact seed runs ZERO phases,
+    which is where warm-start rematching earns its keep on mostly-stable
+    streams. Returns (mate_row, mate_col)."""
+    mate_row, mate_col = repair_mates_batched(
+        row, col, val, row_ptr, n, mate_row, mate_col, window_steps)
+    return mcm_batched(row, col, val, n, mate_row, mate_col)
+
+
+def _awpm_batched_from_state(row, col, val, n: int, mate_row, mate_col,
+                             max_iter: int = 1000,
+                             min_gain: float = MIN_GAIN, backend: str = "auto",
+                             row_ptr=None, window_steps: int | None = None,
+                             degrade_infeasible: bool = False):
+    """Warm-start batched pipeline: repair the seed mates -> MCM top-up ->
+    AWAC, replacing greedy + MCM-from-scratch (DESIGN.md §11). Returns
+    (MatchState, awac_iters [B]), same contract as ``_awpm_batched``.
+
+    When the seed IS an AWAC fixed point of the same instance (the
+    previous result of an unchanged problem), repair keeps every pair, the
+    top-up runs zero phases, and AWAC converges on its first round —
+    returning the seed matching (mates, duals, weight) bit-identically."""
+    window_steps = _resolve_window_steps_batched(row, n, window_steps)
+    if row_ptr is None:
+        row_ptr = batched_row_ptr_from_sorted(row, n)
+    mate_row, mate_col = _normalize_mates_batched(
+        mate_row, mate_col, row.shape[0], n)
+    mate_row, mate_col = warm_mates_batched(
+        row, col, val, row_ptr, n, mate_row, mate_col, window_steps)
+    state = _state_from_mates_windowed(row, col, val, row_ptr, n, mate_row,
+                                       mate_col, window_steps)
+    return awac_batched(row, col, val, n, state, max_iter=max_iter,
+                        min_gain=min_gain, backend=backend, row_ptr=row_ptr,
+                        window_steps=window_steps,
+                        degrade_infeasible=degrade_infeasible)
 
 
 def awpm_batched(row, col, val, n: int, max_iter: int = 1000,

@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +31,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import batch, single
 from repro.core._compat import warn_legacy
-from repro.core.single import MatchState, NEG, MIN_GAIN
+from repro.core.single import MIN_GAIN, NEG, MatchState
 from repro.sparse.csr import max_row_nnz, window_depth
 from repro.sparse.ops import (
     batched_searchsorted_in_window,
@@ -315,7 +314,6 @@ def make_dist_greedy_maximal(spec: GridSpec, n: int, cap: int, max_rounds: int =
     """Distributed greedy weighted maximal matching (proposal rounds).
     Bit-identical to repro.core.single.greedy_maximal."""
     pr, pc = spec.pr, spec.pc
-    br = -(-n // pr)
     bc = -(-n // pc)
     row_axes = spec.row_axes if len(spec.row_axes) > 1 else spec.row_axes[0]
     col_axis = spec.col_axis
@@ -383,7 +381,6 @@ def make_dist_mcm(spec: GridSpec, n: int, cap: int):
     single-device implementation). Bit-identical to repro.core.single.mcm."""
     pr, pc = spec.pr, spec.pc
     br = -(-n // pr)
-    bc = -(-n // pc)
     row_axes = spec.row_axes if len(spec.row_axes) > 1 else spec.row_axes[0]
     col_axis = spec.col_axis
 

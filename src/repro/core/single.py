@@ -30,11 +30,7 @@ from jax.experimental import enable_x64
 from repro.core._compat import warn_legacy
 from repro.core.constants import MIN_GAIN
 from repro.sparse.csr import max_row_nnz, row_ptr_from_sorted, window_depth
-from repro.sparse.ops import (
-    lex_searchsorted,
-    searchsorted_in_window,
-    segment_max_with_payload,
-)
+from repro.sparse.ops import lex_searchsorted, searchsorted_in_window, segment_max_with_payload
 
 NEG = -jnp.inf
 

@@ -147,7 +147,10 @@ def awac_sweep_batched(row, col, val, row_ptr, mate_row, mate_col, u, v,
         return jnp.full((b, width), fill, x.dtype).at[:, : x.shape[1]].set(x)
 
     tiled = pl.BlockSpec((1, te), lambda i, t: (i, t))
-    full = lambda width: pl.BlockSpec((1, width), lambda i, t: (i, 0))
+
+    def full(width):
+        return pl.BlockSpec((1, width), lambda i, t: (i, 0))
+
     out_spec = pl.BlockSpec((1, np_), lambda i, t: (i, 0))
     out = pl.pallas_call(
         functools.partial(_kernel, n=n, cap=cap, window_steps=window_steps),

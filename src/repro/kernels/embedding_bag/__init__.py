@@ -1,3 +1,5 @@
 from repro.kernels.embedding_bag.embedding_bag import embedding_bag
 from repro.kernels.embedding_bag.ops import embedding_bag_padded
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+__all__ = ["embedding_bag", "embedding_bag_padded", "embedding_bag_ref"]

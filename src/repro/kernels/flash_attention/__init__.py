@@ -1,3 +1,5 @@
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ops import attention
 from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["attention", "attention_ref", "flash_attention"]

@@ -20,9 +20,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.backend import resolve_interpret
-from jax.experimental.pallas import tpu as pltpu
 
 NEG = float("-inf")
 

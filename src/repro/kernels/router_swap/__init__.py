@@ -1,3 +1,5 @@
 from repro.kernels.router_swap.ops import router_swap_padded
 from repro.kernels.router_swap.ref import router_swap_ref
 from repro.kernels.router_swap.router_swap import router_swap
+
+__all__ = ["router_swap", "router_swap_padded", "router_swap_ref"]

@@ -10,12 +10,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.configs.base import ShapeSpec, shapes_for
@@ -181,7 +182,6 @@ def _gnn_cells(arch, cfg, shape: ShapeSpec, mesh, variants=()):
     from repro.models.gnn.graphcast import GraphCastBatch
 
     fdt = jnp.bfloat16 if "gnn_bf16" in variants else jnp.float32
-    batch_ax = mesh_lib.batch_axes(mesh)
     all_ax = mesh_lib.all_axes(mesh)
     shard_ax = all_ax  # graph entities shard over every axis
     rules = mesh_lib.gnn_param_rules(cfg, mesh)

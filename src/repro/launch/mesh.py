@@ -5,7 +5,6 @@ FUNCTION, per the dry-run contract)."""
 from __future__ import annotations
 
 import jax
-from jax.sharding import PartitionSpec as P
 
 try:  # jax >= 0.6: meshes carry explicit axis types
     from jax.sharding import AxisType

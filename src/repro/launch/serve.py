@@ -1,7 +1,14 @@
-"""Serving launcher: LM prefill+decode loop or recsys scoring (CLI).
+"""LM serving launcher: prefill+decode loop for the transformer stack (CLI).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
       --prompt-len 16 --decode-steps 8
+
+This is the *language-model* demo loop only. The matching service — the
+paper's solver behind a request interface, with shard routing, size-class
+batching, plan caching and warm-start rematching (DESIGN.md §11) — lives
+in ``repro.serving``:
+
+  PYTHONPATH=src python -m repro.serving --requests 256 --rate 400
 """
 from __future__ import annotations
 

@@ -15,7 +15,6 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention.ops import attention as flash_or_ref
 from repro.models.act_sharding import constrain
 from repro.models.layers import dense, dense_def, rope
-from repro.models.param import ParamDef
 
 
 def attention_def(cfg):

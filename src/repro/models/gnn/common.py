@@ -10,7 +10,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.layers import dense, dense_def
-from repro.models.param import ParamDef, dense_init
 
 
 @jax.tree_util.register_dataclass

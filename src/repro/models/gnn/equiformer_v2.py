@@ -24,7 +24,11 @@ import numpy as np
 
 from repro.models.act_sharding import constrain
 from repro.models.gnn.common import (
-    GraphBatch, mlp2, mlp2_def, radial_basis, real_spherical_harmonics,
+    GraphBatch,
+    mlp2,
+    mlp2_def,
+    radial_basis,
+    real_spherical_harmonics,
     sh_degree_index,
 )
 from repro.models.layers import dense, dense_def

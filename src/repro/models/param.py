@@ -20,7 +20,7 @@ Logical axis vocabulary (see launch/mesh.py for the production rules):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Sequence
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

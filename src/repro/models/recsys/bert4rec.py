@@ -12,7 +12,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import (
-    dense, dense_def, gelu_mlp, gelu_mlp_def, layernorm, layernorm_def,
+    dense,
+    dense_def,
+    gelu_mlp,
+    gelu_mlp_def,
+    layernorm,
+    layernorm_def,
     softmax_xent,
 )
 from repro.models.param import ParamDef, embed_init

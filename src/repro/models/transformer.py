@@ -6,8 +6,6 @@ Parameters are stacked along a leading layer dimension and consumed by
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
@@ -15,7 +13,7 @@ from repro.models import moe as moe_lib
 from repro.models.act_sharding import constrain
 from repro.models.attention import attention_def, decode_attention, self_attention
 from repro.models.layers import dense, dense_def, mlp, mlp_def, rmsnorm, rmsnorm_def, softmax_xent
-from repro.models.param import ParamDef, dense_init, embed_init, is_def
+from repro.models.param import ParamDef, embed_init, is_def
 
 
 def stack_defs(defs, n: int):

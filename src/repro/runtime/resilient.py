@@ -41,7 +41,6 @@ import numpy as np
 
 from repro.core import api as _api
 from repro.core import single as _single
-from repro.core.constants import MIN_GAIN
 from repro.core.dist import ExchangeIntegrityError
 from repro.core.preflight import PreflightError
 
@@ -398,18 +397,24 @@ def _serve(problem, rungs, requested_label, options, resilience, run_rung):
 def resilient_solve(problem: _api.MatchingProblem,
                     options: _api.SolveOptions | None = None,
                     resilience: ResilientOptions | None = None,
-                    fleet=None) -> ResilientResult:
+                    fleet=None, warm_start=None) -> ResilientResult:
     """``core.api.solve`` behind the full guard stack (module docstring).
     ``fleet`` is an optional ``runtime.elastic.FleetState`` consulted
-    before the grid rung. Returns a :class:`ResilientResult`; raises
-    ``DeadlineExceededError`` / ``VerificationError`` (each carrying the
-    report) when no rung can serve, and propagates request errors
-    (``PreflightError`` etc.) untouched."""
+    before the grid rung. ``warm_start`` threads straight through to
+    ``solve`` on every rung (warm-start rematching, DESIGN.md §11) — a
+    seed the facade rejects as stale raises immediately (fatal: the
+    *request* is wrong, no rung can fix it; the serving tier's
+    ``serving.warm.solve_with_seed`` owns the cold fallback). Returns a
+    :class:`ResilientResult`; raises ``DeadlineExceededError`` /
+    ``VerificationError`` (each carrying the report) when no rung can
+    serve, and propagates request errors (``PreflightError`` etc.)
+    untouched."""
     options = _api.SolveOptions() if options is None else options
     resilience = ResilientOptions() if resilience is None else resilience
     rungs = _build_rungs(options, fleet=fleet)
     return _serve(problem, rungs, rungs[0][0], options, resilience,
-                  lambda label, opts: _api.solve(problem, opts))
+                  lambda label, opts: _api.solve(
+                      problem, opts, warm_start=warm_start))
 
 
 class ResilientMatcher:
@@ -434,11 +439,13 @@ class ResilientMatcher:
             self._matchers[label] = m
         return m
 
-    def __call__(self, problem: _api.MatchingProblem) -> ResilientResult:
+    def __call__(self, problem: _api.MatchingProblem,
+                 warm_start=None) -> ResilientResult:
         return _serve(
             problem, self._rungs, self._rungs[0][0], self.options,
             self.resilience,
-            lambda label, opts: self._matcher(label, opts)(problem))
+            lambda label, opts: self._matcher(label, opts)(
+                problem, warm_start=warm_start))
 
     def __repr__(self):
         return (f"ResilientMatcher(rungs={[r for r, _ in self._rungs]}, "

@@ -1,0 +1,53 @@
+"""Matching-as-a-service tier (DESIGN.md §11): long-lived serving in
+front of the ``core.api`` facade.
+
+The paper's motivating workload — pivot orders for a stream of sparse
+factorizations — arrives as many mostly-similar instances per second, not
+one-shot calls. This package turns the compile-once/run-many ``Matcher``
+into an actual service:
+
+  ``service``     request admission, consistent-hash shard routing,
+                  size-class bucketing, batch dispatch (the front door:
+                  :class:`MatchingService`).
+  ``plan_cache``  LRU of pre-planned ``Matcher``s per size class with
+                  hit/miss/eviction counters.
+  ``batcher``     deadline batcher: pads requests into [B, cap] batches,
+                  dispatching on batch-full or deadline expiry.
+  ``warm``        warm-start seed cache + seed-or-cold fallback helper.
+  ``loadgen``     open-loop (Poisson-arrival) load generator for the
+                  serving benchmark and the ``python -m repro.serving``
+                  demo CLI.
+"""
+from repro.serving.batcher import DeadlineBatcher, Flush
+from repro.serving.loadgen import StreamSpec, run_stream
+from repro.serving.plan_cache import CacheStats, PlanCache
+from repro.serving.service import (
+    MatchingService,
+    Response,
+    ServiceConfig,
+    ShardRouter,
+    SizeClass,
+    embed_instance,
+    size_class_for,
+    strip_instance,
+)
+from repro.serving.warm import WarmStartCache, solve_with_seed
+
+__all__ = [
+    "CacheStats",
+    "DeadlineBatcher",
+    "Flush",
+    "MatchingService",
+    "PlanCache",
+    "Response",
+    "ServiceConfig",
+    "ShardRouter",
+    "SizeClass",
+    "StreamSpec",
+    "WarmStartCache",
+    "embed_instance",
+    "run_stream",
+    "size_class_for",
+    "solve_with_seed",
+    "strip_instance",
+]

@@ -5,16 +5,6 @@ message passing. Per the project brief these are implemented here from
 ``jnp.take`` + ``jax.ops.segment_sum``-family primitives and are first-class
 parts of the system (used by repro.core, repro.models.gnn, repro.models.recsys).
 """
-from repro.sparse.ops import (
-    segment_argmax,
-    segment_max_with_payload,
-    segment_softmax,
-    coo_spmm,
-    coo_sddmm,
-    lex_searchsorted,
-    searchsorted_in_window,
-    x64_available,
-)
 from repro.sparse.csr import (
     PaddedCSR,
     coo_to_padded_csr,
@@ -23,6 +13,16 @@ from repro.sparse.csr import (
     row_ptr_from_sorted,
     sort_coo,
     window_depth,
+)
+from repro.sparse.ops import (
+    coo_sddmm,
+    coo_spmm,
+    lex_searchsorted,
+    searchsorted_in_window,
+    segment_argmax,
+    segment_max_with_payload,
+    segment_softmax,
+    x64_available,
 )
 from repro.sparse.partition import (
     Partition2D,

@@ -1,0 +1,42 @@
+"""Tier-1 wall-clock budget: any test NOT marked ``slow`` that takes
+longer than ``REPRO_TEST_BUDGET_S`` seconds (default 60) fails the
+session, even if it passed.
+
+The tier-1 job runs with ``--durations=15`` so the slowest tests are
+always visible in the CI log; this hook turns that visibility into a
+gate. A test that legitimately needs more than the budget gets
+``@pytest.mark.slow`` — explicitly, so reviewers see the opt-out in the
+diff — instead of silently inflating the suite every push.
+"""
+import os
+
+import pytest
+
+BUDGET_S = float(os.environ.get("REPRO_TEST_BUDGET_S", "60"))
+
+_over_budget: list[tuple[str, float]] = []
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_makereport(item, call):
+    outcome = yield
+    report = outcome.get_result()
+    if report.when != "call" or report.duration <= BUDGET_S:
+        return
+    if item.get_closest_marker("slow") is None:
+        _over_budget.append((item.nodeid, report.duration))
+
+
+def pytest_terminal_summary(terminalreporter, exitstatus, config):
+    if not _over_budget:
+        return
+    terminalreporter.section("slow-test budget")
+    for nodeid, duration in _over_budget:
+        terminalreporter.write_line(
+            f"OVER BUDGET {nodeid}: {duration:.1f}s > {BUDGET_S:.0f}s "
+            f"(mark it @pytest.mark.slow or make it faster)")
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if _over_budget:
+        session.exitstatus = 1

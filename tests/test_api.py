@@ -18,9 +18,9 @@ Contracts under test:
 """
 import warnings
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from _subproc import run_with_devices

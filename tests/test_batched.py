@@ -11,8 +11,8 @@ Also covers degenerate inputs (n=1, all-ties weights, single dense row) and
 error paths (unknown backend, explicit window_steps / precomputed row_ptr
 overrides) that previously had zero coverage.
 """
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core import batch, graph, single

@@ -3,8 +3,8 @@ in-process detect/survive cases. The full fault matrix on an 8-fake-device
 2x4 grid is the dedicated CI chaos job (`python -m repro.runtime.chaos`);
 here a 2x2 subprocess case keeps a real multi-device exchange fault under
 tier-1."""
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from _subproc import run_with_devices
@@ -12,10 +12,12 @@ from repro.core import (
     MatchingProblem,
     PreflightError,
     SolveOptions,
+    batch,
+    dist,
     graph,
+    single,
     solve,
 )
-from repro.core import batch, dist, single
 from repro.runtime import chaos
 from repro.runtime.resilient import (
     ResilientOptions,

@@ -1,6 +1,6 @@
 """Single-device AWPM vs numpy oracles."""
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core import graph, ref, single

@@ -6,8 +6,8 @@ Covers the three Step-C backends on padded COO instances:
   * pallas     — fused ``awac_sweep`` kernel (interpret mode on CPU)
 including gain ties, the all-padding instance, and the no-candidate case.
 """
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 from jax.experimental import enable_x64
 

@@ -1,7 +1,7 @@
 """Per-kernel interpret=True validation vs pure-jnp oracles (shape/dtype sweeps)."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.kernels.cycle_gain import cycle_gain_padded, cycle_gain_ref

@@ -1,6 +1,6 @@
 """Mathematical correctness of model building blocks."""
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.models.gnn.common import real_spherical_harmonics, sh_degree_index

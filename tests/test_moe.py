@@ -1,13 +1,18 @@
 """MoE router + dispatch unit tests (incl. the AWPM router = the paper's
 technique applied to token->expert assignment)."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.models.moe import (
-    awpm_route, awpm_route_batched, balanced_assign, balanced_assign_batched,
-    swap_improve, swap_improve_batched, topk_route,
+    awpm_route,
+    awpm_route_batched,
+    balanced_assign,
+    balanced_assign_batched,
+    swap_improve,
+    swap_improve_batched,
+    topk_route,
 )
 
 

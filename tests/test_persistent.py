@@ -20,13 +20,12 @@ Contracts under test (ISSUE 7):
 """
 import json
 
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
-from repro.core import MatchingProblem, SolveOptions, batch, graph, single, \
-    solve
+from repro.core import MatchingProblem, SolveOptions, batch, graph, single, solve
 from repro.kernels import backend as kbackend
 from repro.kernels import dispatch as kdispatch
 from repro.kernels.cycle_gain.awac_sweep import awac_sweep_batched

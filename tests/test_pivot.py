@@ -1,6 +1,6 @@
 """Static pivoting (paper §6.6): AWPM permutation must rescue a pivot-free LU."""
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import graph, pivot, ref, single
 

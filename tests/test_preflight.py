@@ -2,9 +2,9 @@
 every degenerate input is typed and located, sanitize repairs exactly the
 fatal data issues, and the solve pipeline short-circuits AWAC on infeasible
 instances under every policy."""
-import numpy as np
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 from repro.core import (

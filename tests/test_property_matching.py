@@ -1,8 +1,8 @@
 """Hypothesis property tests on the matching system's invariants."""
 import time
 
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 hypothesis = pytest.importorskip("hypothesis")

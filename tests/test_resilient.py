@@ -4,8 +4,8 @@ injection comes from runtime.chaos; everything here runs in-process on a
 1x1 grid at most."""
 import dataclasses
 
-import numpy as np
 import jax
+import numpy as np
 import pytest
 
 from repro.core import MatchingProblem, SolveOptions, graph, solve

@@ -1,0 +1,314 @@
+"""Serving tier (repro.serving, DESIGN.md §11): routing, size classes,
+deadline batching, plan caching, warm-start fallback, and the service's
+bit-identity contract against the direct ``core.api`` solve.
+
+Everything runs on an injected simulated clock (``now=``) — no sleeps,
+no wall-clock flakiness; only the tiny n<=32 class solves touch jax.
+"""
+import numpy as np
+import pytest
+
+from repro.core import MatchingProblem, ProblemSpec, graph, plan, solve
+from repro.serving import (
+    DeadlineBatcher,
+    MatchingService,
+    PlanCache,
+    ServiceConfig,
+    ShardRouter,
+    SizeClass,
+    WarmStartCache,
+    size_class_for,
+    solve_with_seed,
+)
+
+# ------------------------------------------------------------------ helpers
+
+
+def _identical(a, b):
+    return (np.array_equal(np.asarray(a.mate_row), np.asarray(b.mate_row))
+            and np.array_equal(np.asarray(a.mate_col), np.asarray(b.mate_col))
+            and np.allclose(np.asarray(a.weight), np.asarray(b.weight)))
+
+
+def _svc(**over):
+    defaults = dict(num_shards=2, deadline_s=0.5, max_batch=4,
+                    min_class_n=16, max_class_n=64)
+    defaults.update(over)
+    return MatchingService(ServiceConfig(**defaults), clock=lambda: 0.0)
+
+
+# ------------------------------------------------------------- size classes
+
+
+def test_size_class_ladder():
+    cls = size_class_for(5, 12)
+    assert cls == SizeClass(n=32, cap=64, batch=8)  # 12 + 27 dummies -> 64
+    cls = size_class_for(48, 200)
+    assert cls == SizeClass(n=64, cap=256, batch=8)  # 200 + 16 -> 256
+    # cap always covers a full identity diagonal even for sparse instances
+    cls = size_class_for(33, 0)
+    assert cls.n == 64 and cls.cap >= 64
+    # same class for nearby sizes: that is the whole point of the ladder
+    assert size_class_for(30, 90) == size_class_for(27, 80)
+
+
+def test_size_class_oversize_is_exact_batch_1():
+    cls = size_class_for(5000, 60000, max_class_n=4096)
+    assert cls.n == 5000 and cls.batch == 1
+    assert cls.cap == 60000 and cls.cap % 8 == 0
+    cls = size_class_for(4097, 10, max_class_n=4096)
+    assert cls.n == 4097 and cls.batch == 1 and cls.cap >= 4097
+
+
+def test_size_class_validation():
+    with pytest.raises(ValueError):
+        size_class_for(0, 5)
+    with pytest.raises(ValueError):
+        size_class_for(4, -1)
+    with pytest.raises(ValueError):
+        SizeClass(n=32, cap=16, batch=1)  # cannot hold its own filler
+
+
+# ------------------------------------------------------------------ routing
+
+
+def test_shard_router_deterministic_and_consistent():
+    r1, r2 = ShardRouter(4), ShardRouter(4)
+    keys = [f"user-{i}" for i in range(200)]
+    assert [r1.shard_for(k) for k in keys] == [r2.shard_for(k) for k in keys]
+    for k in keys:
+        assert r1.shard_for(k) == r1.slot_for(k) % 4
+        assert 0 <= r1.slot_for(k) < r1.total_slots
+    # growing the fleet remaps slots, not the hash space
+    r8 = ShardRouter(8, n_bits=r1.n_bits)
+    for k in keys:
+        assert r8.slot_for(k) == r1.slot_for(k)
+    # slots partition exactly across shards
+    all_slots = sorted(s for sh in range(4) for s in r1.slots_for_shard(sh))
+    assert all_slots == list(range(r1.total_slots))
+
+
+def test_shard_router_validation():
+    with pytest.raises(ValueError):
+        ShardRouter(0)
+    with pytest.raises(ValueError):
+        ShardRouter(4, n_bits=0)
+    with pytest.raises(ValueError):
+        ShardRouter(4).slots_for_shard(4)
+
+
+# --------------------------------------------------------------- plan cache
+
+
+def test_plan_cache_lru_eviction_and_replan():
+    built = []
+
+    def builder(tag):
+        def build():
+            built.append(tag)
+            return f"plan-{tag}"
+        return build
+
+    cache = PlanCache(capacity=2)
+    assert cache.get("a", builder("a")) == "plan-a"
+    assert cache.get("b", builder("b")) == "plan-b"
+    assert cache.get("a", builder("a")) == "plan-a"  # hit: a now MRU
+    assert cache.get("c", builder("c")) == "plan-c"  # evicts b (LRU)
+    assert "b" not in cache and "a" in cache
+    assert cache.stats.evictions == 1
+    # an evicted key coming back is re-planned transparently
+    assert cache.get("b", builder("b")) == "plan-b"
+    assert built == ["a", "b", "c", "b"]
+    assert cache.stats.hits == 1 and cache.stats.misses == 4
+
+
+def test_plan_cache_throwing_build_leaves_cache_untouched():
+    cache = PlanCache(capacity=1)
+    cache.get("a", lambda: "plan-a")
+    with pytest.raises(RuntimeError):
+        cache.get("boom", lambda: (_ for _ in ()).throw(RuntimeError("x")))
+    assert cache.keys() == ["a"]
+    assert cache.get("a", lambda: "never") == "plan-a"
+
+
+# ------------------------------------------------------------------ batcher
+
+
+def test_batcher_deadline_flush_with_partial_batch():
+    b = DeadlineBatcher(deadline_s=0.5)
+    assert b.add("k", "r0", now=0.0, max_batch=4) is None
+    assert b.due(now=0.4) == [] and b.pending() == 1
+    assert b.next_deadline() == pytest.approx(0.5)
+    flushes = b.due(now=0.7)  # pumped late, as a simulated clock does
+    assert len(flushes) == 1
+    f = flushes[0]
+    assert f.items == ("r0",) and f.reason == "deadline"
+    # latency is charged to the deadline, not to the late pump
+    assert f.dispatched_at == pytest.approx(0.5)
+    assert b.pending() == 0 and b.next_deadline() is None
+
+
+def test_batcher_full_flush_is_immediate():
+    b = DeadlineBatcher(deadline_s=10.0)
+    assert b.add("k", "r0", now=0.0, max_batch=2) is None
+    f = b.add("k", "r1", now=0.1, max_batch=2)
+    assert f is not None and f.reason == "full"
+    assert f.items == ("r0", "r1") and f.dispatched_at == pytest.approx(0.1)
+
+
+def test_batcher_drain_and_validation():
+    b = DeadlineBatcher(deadline_s=0.5)
+    b.add("k1", "a", now=0.0, max_batch=4)
+    b.add("k2", "b", now=0.2, max_batch=4)
+    flushes = {f.key: f for f in b.drain(now=0.3)}
+    assert set(flushes) == {"k1", "k2"}
+    assert all(f.reason == "drain" for f in flushes.values())
+    # drain before the deadline charges only the time actually waited
+    assert flushes["k2"].dispatched_at == pytest.approx(0.3)
+    with pytest.raises(ValueError):
+        DeadlineBatcher(-1.0)
+    with pytest.raises(ValueError):
+        b.add("k", "x", now=0.0, max_batch=0)
+
+
+# --------------------------------------------------------------- warm cache
+
+
+def test_warm_cache_stale_class_and_lru():
+    c = WarmStartCache(capacity=2)
+    mr, mc = np.arange(17, dtype=np.int32), np.arange(17, dtype=np.int32)
+    c.put("u1", 16, mr, mc)
+    got = c.seed_for("u1", 16)
+    assert got is not None and np.array_equal(got[0], mr)
+    # a seed from another size class is stale, never repaired
+    assert c.seed_for("u1", 32) is None
+    assert c.seed_for("nobody", 16) is None
+    assert (c.stats.served, c.stats.stale, c.stats.absent) == (1, 1, 1)
+    c.put("u2", 16, mr, mc)
+    c.put("u3", 16, mr, mc)  # evicts u1 (capacity 2)
+    assert len(c) == 2 and c.seed_for("u1", 16) is None
+    with pytest.raises(ValueError):
+        c.put("bad", 16, np.arange(5), np.arange(5))
+
+
+def test_solve_with_seed_falls_back_cold_bit_identically():
+    g = graph.generate(12, avg_degree=4.0, kind="uniform", seed=3)
+    p = MatchingProblem.from_graph(g)
+    matcher = plan(ProblemSpec(n=p.n, cap=p.cap))
+    cold = matcher(p)
+    for bad in [(np.zeros(5, np.int32), np.zeros(5, np.int32)),  # stale shape
+                12.5,                                            # not a seed
+                (np.zeros(13, np.int32),)]:                      # not a pair
+        result, served_warm = solve_with_seed(matcher, p, bad)
+        assert not served_warm
+        assert _identical(result, cold)
+    # a valid fixed-point seed is served warm and returns bit-identically
+    result, served_warm = solve_with_seed(
+        matcher, p, (np.asarray(cold.mate_row), np.asarray(cold.mate_col)))
+    assert served_warm and _identical(result, cold)
+
+
+# -------------------------------------------------------------- the service
+
+
+def test_service_cold_lane_bit_identical_to_direct_solve():
+    svc = _svc()
+    gs = {f"user-{i}": graph.generate(13, avg_degree=4.0, seed=i)
+          for i in range(3)}
+    for key, g in gs.items():
+        svc.submit(key, g, now=0.0)
+    svc.drain(now=0.1)
+    responses = svc.responses()
+    assert len(responses) == 3
+    for r in responses:
+        assert r.ok and r.lane == "cold" and not r.served_warm
+        direct = solve(MatchingProblem.from_graph(gs[r.key]))
+        assert _identical(r.result, direct)
+        assert r.result.perfect == direct.perfect
+        assert r.result.mate_row.shape == (14,)  # stripped back to true n
+
+
+def test_service_deadline_flush_then_warm_repeat():
+    svc = _svc(num_shards=1)
+    g = graph.generate(12, avg_degree=4.0, seed=7)
+    svc.submit("u", g, now=0.0)
+    assert svc.responses() == []  # queued: batch not full, deadline not hit
+    svc.pump(now=1.0)  # past the 0.5s deadline
+    (first,) = svc.responses()
+    assert first.flush_reason == "deadline" and first.lane == "cold"
+    assert first.dispatched_at == pytest.approx(0.5)  # charged to deadline
+    assert first.batch_fill == 1  # partial batch, padded by fillers
+    # the same key again: seeded from its own converged mates -> warm lane,
+    # and (same instance, fixed-point seed) bit-identical to the cold result
+    svc.submit("u", g, now=2.0)
+    svc.pump(now=3.0)
+    (second,) = svc.responses()
+    assert second.served_warm and second.lane == "warm"
+    assert _identical(second.result, first.result)
+    stats = svc.stats()
+    assert stats["served_warm"] == 1 and stats["served_cold"] == 1
+    assert stats["warm_cache"]["served"] == 1
+
+
+def test_service_oversize_request_gets_own_class_and_dispatches_now():
+    svc = _svc(max_class_n=16, max_batch=4)
+    g = graph.generate(20, avg_degree=4.0, seed=5)  # n > max_class_n
+    svc.submit("big", g, now=0.0)
+    (r,) = svc.responses()  # batch=1 class: full on arrival, no deadline wait
+    assert r.flush_reason == "full" and r.batch_fill == 1
+    assert r.size_class.n == 20 and r.size_class.batch == 1
+    assert _identical(r.result, solve(MatchingProblem.from_graph(g)))
+
+
+def test_service_poisoned_batchmate_degrades_alone():
+    svc = _svc(num_shards=1)
+    good = graph.generate(12, avg_degree=4.0, seed=11)
+    # rows 0 and 1 both reach only column 0: structurally infeasible
+    poisoned = MatchingProblem(
+        row=np.array([0, 1], np.int32), col=np.array([0, 0], np.int32),
+        val=np.array([1.0, 2.0], np.float32), n=2)
+    svc.submit("good", good, now=0.0)
+    svc.submit("poisoned", poisoned, now=0.0)
+    svc.drain(now=0.1)
+    by_key = {r.key: r for r in svc.responses()}
+    assert by_key["poisoned"].ok  # degraded, not failed
+    assert not by_key["poisoned"].result.perfect
+    assert by_key["good"].result.perfect
+    assert _identical(by_key["good"].result,
+                      solve(MatchingProblem.from_graph(good)))
+    assert svc.stats()["degraded"] == 1
+
+
+def test_service_admission_sanitize_and_reject():
+    nan_problem = MatchingProblem(
+        row=np.array([0, 1], np.int32), col=np.array([1, 0], np.int32),
+        val=np.array([np.nan, 1.0], np.float32), n=2)
+    svc = _svc()  # default: sanitize
+    svc.submit("u", nan_problem, now=0.0)
+    svc.drain(now=0.1)
+    (r,) = svc.responses()
+    assert r.ok and "sanitized at admission" in r.error
+    svc = _svc(admission="reject")
+    svc.submit("u", nan_problem, now=0.0)
+    (r,) = svc.responses()  # rejected synchronously, nothing queued
+    assert not r.ok and r.lane == "rejected" and r.result is None
+    assert svc.stats()["rejected"] == 1
+    with pytest.raises(ValueError):
+        ServiceConfig(admission="explode")
+
+
+def test_service_plan_cache_eviction_replans():
+    # capacity 1 with two alternating classes: every class switch evicts
+    # and re-plans; results must stay correct through it
+    svc = _svc(plan_capacity=1, max_batch=1, max_class_n=64)
+    small = graph.generate(10, avg_degree=3.0, seed=1)   # class n=16
+    large = graph.generate(20, avg_degree=3.0, seed=2)   # class n=32
+    for t, (key, g) in enumerate([("s", small), ("l", large),
+                                  ("s2", small), ("l2", large)]):
+        svc.submit(key, g, now=float(t))  # max_batch=1: dispatches now
+    responses = {r.key: r for r in svc.responses()}
+    assert len(responses) == 4
+    assert svc.plans.stats.evictions >= 2 and len(svc.plans) == 1
+    for key, g in [("s", small), ("s2", small), ("l", large), ("l2", large)]:
+        assert _identical(responses[key].result,
+                          solve(MatchingProblem.from_graph(g)))

@@ -1,14 +1,14 @@
 """Sparse substrate unit tests."""
-import numpy as np
 import jax.numpy as jnp
+import numpy as np
 
 from repro.sparse import (
-    coo_spmm,
     coo_sddmm,
+    coo_spmm,
     coo_to_padded_csr,
     partition_coo_2d,
-    segment_softmax,
     segment_max_with_payload,
+    segment_softmax,
 )
 from repro.sparse.ops import segment_argmax_tie
 

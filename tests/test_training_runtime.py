@@ -1,16 +1,19 @@
 """Training loop, optimizer, checkpoint, elastic, straggler, compression."""
-import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
+import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.runtime.straggler import StragglerMonitor
 from repro.training.grad_compression import (
-    CompressedState, compress_topk, init_state, quantize_int8, dequantize_int8,
+    CompressedState,
+    compress_topk,
+    dequantize_int8,
+    init_state,
+    quantize_int8,
 )
 from repro.training.loop import make_train_step, train
-from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.training.optimizer import AdamWConfig, init_opt_state
 
 
 def _quad_loss(params, batch):
@@ -125,8 +128,6 @@ def test_topk_error_feedback_converges():
 def test_elastic_mesh_shrink():
     # simulated: 4x2 grid, kill one device -> its data row is dropped
     from repro.runtime import elastic
-
-    devs = np.array(jax.devices() * 8)[:8].reshape(4, 2)
 
     class FakeDev:
         def __init__(self, i):
