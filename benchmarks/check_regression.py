@@ -176,6 +176,59 @@ def check_serving(rows: dict[str, dict], min_rps: float, max_p99_us: float,
     return failures
 
 
+def check_solver(rows: dict[str, dict], max_residual: float) -> list[str]:
+    """Absolute gate for a fresh ``BENCH_solver.json`` (``--solver FRESH``).
+
+    The solver experiments (``results/fill_experiments.py``) are gated on
+    the claims they exist to demonstrate, not on timing:
+
+    1. every ``awpm``-arm row (and every ``reference``-arm row present)
+       must have converged with true relative residual <= ``max_residual``
+       — AWPM static pivoting + iterative refinement must work on EVERY
+       case;
+    2. at least one case must show the contrast — its ``none`` arm failed
+       (diverged/stalled refinement) while its ``awpm`` arm converged.
+       That contrast IS the reproduced result; a sweep where unpivoted LU
+       quietly succeeds everywhere no longer demonstrates anything.
+    """
+    failures = []
+    by_case: dict[str, dict[str, dict]] = {}
+    for name, r in rows.items():
+        m = re.match(r"solver_(.+)_(awpm|reference|none|tpp)$", name)
+        if m:
+            by_case.setdefault(m.group(1), {})[m.group(2)] = r
+    if not by_case:
+        return ["solver: no solver_<case>_<arm> rows found"]
+    for case in sorted(by_case):
+        for arm in ("awpm", "reference"):
+            r = by_case[case].get(arm)
+            if r is None:
+                if arm == "awpm":
+                    failures.append(f"solver {case}: awpm row is missing")
+                continue  # reference is optional (scipy-less runners)
+            derived = r.get("derived", "")
+            res = _derived_value(derived, "residual")
+            if "converged=True" not in derived:
+                failures.append(
+                    f"solver {case} [{arm}]: did not converge "
+                    f"(derived={derived!r})")
+            elif res is None or res > max_residual:
+                failures.append(
+                    f"solver {case} [{arm}]: residual "
+                    f"{res if res is not None else 'missing'} over the "
+                    f"{max_residual:g} ceiling")
+    contrast = [
+        case for case, arms in sorted(by_case.items())
+        if "converged=False" in arms.get("none", {}).get("derived", "")
+        and "converged=True" in arms.get("awpm", {}).get("derived", "")]
+    if not contrast:
+        failures.append(
+            "solver: no case shows the none-fails/awpm-converges contrast "
+            "— the experiment no longer demonstrates that matching-based "
+            "static pivoting replaces numerical pivoting")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline")
@@ -193,11 +246,18 @@ def main() -> None:
     ap.add_argument("--serving-min-rps", type=float, default=20.0)
     ap.add_argument("--serving-max-p99-us", type=float, default=250_000.0)
     ap.add_argument("--serving-min-speedup", type=float, default=1.05)
+    ap.add_argument("--solver", metavar="FRESH",
+                    help="gate a fresh BENCH_solver.json on absolute "
+                         "claims: every awpm row converged under the "
+                         "residual ceiling, and >= 1 case where the "
+                         "unpivoted arm failed while awpm converged")
+    ap.add_argument("--solver-max-residual", type=float, default=1e-10)
     args = ap.parse_args()
     if bool(args.baseline) != bool(args.fresh):
         ap.error("--baseline and --fresh go together")
-    if not args.baseline and not args.serving:
-        ap.error("nothing to do: pass --baseline/--fresh and/or --serving")
+    if not args.baseline and not args.serving and not args.solver:
+        ap.error("nothing to do: pass --baseline/--fresh, --serving, "
+                 "and/or --solver")
     failures = []
     n = 0
     if args.baseline:
@@ -218,6 +278,9 @@ def main() -> None:
         failures += check_serving(
             _rows(args.serving), args.serving_min_rps,
             args.serving_max_p99_us, args.serving_min_speedup)
+    if args.solver:
+        failures += check_solver(_rows(args.solver),
+                                 args.solver_max_residual)
     for msg in failures:
         print(f"FAIL {msg}")
     if failures:
@@ -233,6 +296,10 @@ def main() -> None:
         parts.append(f"serving SLOs met (>= {args.serving_min_rps:.0f} rps, "
                      f"p99 <= {args.serving_max_p99_us:.0f}us, warm >= "
                      f"{args.serving_min_speedup:.2f}x)")
+    if args.solver:
+        parts.append(f"solver: awpm converged <= "
+                     f"{args.solver_max_residual:g} on every case, "
+                     f"unpivoted-fails contrast present")
     print(f"# regression gate OK: {'; '.join(parts)}")
 
 

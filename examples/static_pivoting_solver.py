@@ -5,12 +5,16 @@ Builds an ill-conditioned system (tiny diagonal, heavy hidden permutation),
 equilibrates, computes an AWPM row permutation on the log-weights (MC64
 option-5 analogue), factorizes WITHOUT pivoting, and compares the solution
 error against (a) no pre-pivoting and (b) the exact MWPM permutation.
+The final section runs the same contrast through the full ``repro.solver``
+subsystem (DESIGN.md §12): MC64 scalings from dual potentials, sparse LU
+with GESP perturbation, and mixed-precision iterative refinement.
 
   PYTHONPATH=src python examples/static_pivoting_solver.py
 """
 import numpy as np
 
 from repro.core import MatchingProblem, graph, pivot, ref, solve
+from repro.solver import solve_linear_system
 
 
 def _ill_conditioned_system(n, seed):
@@ -70,6 +74,33 @@ def main_batched(n=96, n_systems=4, seed=0):
               f"relative error {err:.3e}")
 
 
+def main_solver(n=32, seed=0):
+    """The contrast through ``repro.solver.solve_linear_system`` — the
+    full pipeline with MC64 scalings and iterative refinement. The system
+    here compounds pivot growth every elimination step (tiny diagonal
+    under a heavy cyclic band), so the unpivoted arm genuinely diverges —
+    reported on the SolveReport, never raised — while AWPM static
+    pivoting holds growth at 1 and converges in two sweeps."""
+    rng = np.random.default_rng(seed)
+    row, col, val = [], [], []
+    for i in range(n):
+        row += [i, i, i]
+        col += [i, (i + 1) % n, (i + 3) % n]
+        val += [1e-8 * (1.0 + rng.random()), 5.0 + 5.0 * rng.random(),
+                0.01 + 0.09 * rng.random()]
+    a = (np.array(row), np.array(col), np.array(val), n)
+    b = rng.standard_normal(n)
+    print(f"\nrepro.solver pipeline (DESIGN.md §12), compounding-growth "
+          f"system (n={n}):")
+    for arm in ("awpm", "none"):
+        rep = solve_linear_system(a, b, pivoting=arm)
+        print(f"  pivoting={arm:5s}: growth={rep.lu_stats.pivot_growth:.3g} "
+              f"sweeps={int(np.max(rep.refinement.iterations))} "
+              f"residual={float(np.max(rep.residual)):.3e} "
+              f"{'CONVERGED' if rep.ok else 'FAILED (the reproduced result)'}")
+
+
 if __name__ == "__main__":
     main()
     main_batched()
+    main_solver()

@@ -11,7 +11,12 @@ Outputs: ``results/paper_eval.md`` (per-matrix table) and
   PYTHONPATH=src python experiments/run_paper_eval.py [--quick]
       [--backends reference,xla,pallas] [--grids 1x1,2x2]
       [--suite-count 10] [--suite-n 96] [--transform log2_scaled_nonneg]
-      [--no-persist]
+      [--no-persist] [--download [--instances Freescale1,rajat31]
+      [--cache-dir DIR]]
+
+``--download`` is the only network path in the repo (opt-in, sha256-pinned
+cache via ``repro.data.suitesparse``); without it the sweep runs entirely
+on checked-in fixtures.
 
 ``--quick`` is the CI docs-job smoke: fixtures + 3 small synthetic
 matrices, reference/xla backends, the 1x1 grid — every correctness check
@@ -67,6 +72,17 @@ def main() -> None:
                     help="run the exact scipy oracle up to this n")
     ap.add_argument("--no-persist", action="store_true",
                     help="skip writing results/ + BENCH_paper_eval.json")
+    ap.add_argument("--download", action="store_true",
+                    help="OPT-IN network: fetch SuiteSparse instances "
+                         "(sha256-pinned cache) and sweep them too. CI "
+                         "never passes this — fixtures need no network.")
+    ap.add_argument("--instances", default=None,
+                    help="with --download: comma list of registry names or "
+                         "Group/name specs (default: the paper registry)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="SuiteSparse cache dir (default: "
+                         "$REPRO_SUITESPARSE_CACHE or "
+                         "~/.cache/repro-suitesparse)")
     args = ap.parse_args()
 
     spec = dict(paper_eval.QUICK_SPEC if args.quick
@@ -77,6 +93,18 @@ def main() -> None:
         spec["synthetic_n"] = args.suite_n
     if args.transform is not None:
         spec["synthetic_transform"] = args.transform
+    if args.instances and not args.download:
+        raise SystemExit("--instances needs --download (no implicit network)")
+    if args.download:
+        from repro.data import suitesparse
+
+        names = ([t.strip() for t in args.instances.split(",") if t.strip()]
+                 if args.instances else None)
+        fetched = suitesparse.fetch_paper_instances(names,
+                                                    cache=args.cache_dir)
+        spec["extra_mtx"] = sorted(str(p) for p in fetched.values())
+        print(f"# suitesparse: {len(fetched)} instance(s) cached under "
+              f"{suitesparse.cache_dir(args.cache_dir)}")
     backends = (args.backends.split(",") if args.backends
                 else (["reference", "xla"] if args.quick
                       else list(paper_eval.LOCAL_BACKENDS)))

@@ -1,152 +1,282 @@
-"""Fill EXPERIMENTS.md placeholders from results/dryrun/*.json + bench logs.
-Run after the sweep: PYTHONPATH=src python results/fill_experiments.py"""
+"""Fill-in / pivot-growth / refinement experiments for the static-pivoting
+solver (DESIGN.md §12) — the end-to-end "does the matching replace
+numerical pivoting?" measurement the paper motivates AWPM with.
+
+Every checked-in ``tests/data/*.mtx`` fixture (plus planted synthetic
+systems in the full sweep) is solved through
+``repro.solver.solve_linear_system`` under four arms:
+
+- **awpm**      — AWPM matching -> static pivots + MC64 scalings (the
+  paper's pipeline);
+- **reference** — exact MC64-style matching (scipy Hungarian oracle),
+  same scalings: isolates matching quality (skipped without scipy);
+- **none**      — no permutation, no scaling, static LU: the contrast arm
+  that is ALLOWED to fail — its divergence on the ill-conditioned cases
+  IS the reproduced result;
+- **tpp**       — no matching, classical threshold partial pivoting: what
+  a solver must do at factor time when nothing was done at match time.
+
+Per (case, arm) row: fill ratio, pivot growth, perturbed pivots, scaled
+diagonal min, refinement sweeps, the true float64 relative residual, and
+convergence. Outputs ``results/fill_experiments.md`` and
+``BENCH_solver.json`` (repo root), gated in CI by
+``benchmarks/check_regression.py --solver``: every awpm row must converge
+to <= 1e-10, and at least one case must show the none-fails/awpm-converges
+contrast.
+
+  PYTHONPATH=src python results/fill_experiments.py [--quick]
+      [--no-persist] [--download [--instances N1,N2] [--cache-dir DIR]
+      [--max-n 4096]]
+
+``--quick`` (the CI smoke) sweeps the fixtures only; the full run adds the
+planted instances. ``--download`` opt-in fetches SuiteSparse instances
+(``repro.data.suitesparse``) and solves those small enough for the dense
+triangular-sweep backend (> ``--max-n`` rows are skipped with a note — the
+measurement here is numerical behavior, not HPC scale).
+"""
+import argparse
+import dataclasses
+import datetime
 import json
 import pathlib
-import re
-import subprocess
 import sys
+import time
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(ROOT / "src"))
 
-from repro.roofline.report import dryrun_table, load, roofline_table  # noqa: E402
+import numpy as np  # noqa: E402
 
-RES = ROOT / "results" / "dryrun"
-
-
-def rec(name):
-    p = RES / f"{name}.json"
-    return json.loads(p.read_text()) if p.exists() else None
+FIXTURE_DIR = ROOT / "tests" / "data"
+ARMS = ("awpm", "reference", "none", "tpp")
 
 
-def fmt_terms(r):
-    rl = r["roofline"]
-    return (f"compute {rl['compute_s']:.3f}s / memory {rl['memory_s']:.3f}s / "
-            f"collective {rl['collective_s']:.3f}s (dominant: {rl['dominant']})")
+@dataclasses.dataclass(frozen=True)
+class SolverRow:
+    """One (case, arm) measurement — a row of the table and of
+    BENCH_solver.json."""
+
+    case: str
+    source: str  # "fixture" | "planted" | "suitesparse"
+    arm: str
+    n: int
+    nnz: int
+    fill: float
+    growth: float
+    perturbed: int
+    diag_min: float
+    sweeps: int
+    residual: float
+    converged: bool
+    wall_s: float
 
 
-def perf_pair(name_base, name_var, cellname, hypothesis, change):
-    b, v = rec(name_base), rec(name_var)
-    if not (b and v and b.get("ok") and v.get("ok")):
-        return f"### {cellname}: variant missing ({name_var})\n"
-    rb, rv = b["roofline"], v["roofline"]
-    dom = rb["dominant"]
-    key = {"compute": "compute_s", "memory": "memory_s",
-           "collective": "collective_s"}[dom]
-    before, after = rb[key], rv[key]
-    verdict = "CONFIRMED" if after < before * 0.95 else (
-        "refuted (<5% or regression)" if after >= before else "small win")
+def fixture_systems():
+    from repro.data.mtx import read_mtx
+
+    for path in sorted(FIXTURE_DIR.glob("*.mtx")):
+        coo = read_mtx(path)
+        yield path.stem, "fixture", (coo.row, coo.col, coo.val, coo.nrows)
+
+
+def planted_systems():
+    """Parameterized synthetic systems extending the fixture story to
+    larger n: the ill-conditioned family (near-zero diagonal under a
+    heavy cyclic band — unpivoted growth compounds every step) and a
+    diagonally dominant control where even the none arm should succeed."""
+    for n, seed in ((32, 1), (64, 2)):
+        rng = np.random.default_rng(seed)
+        row, col, val = [], [], []
+        for i in range(n):
+            row += [i, i, i]
+            col += [i, (i + 1) % n, (i + 3) % n]
+            val += [1e-8 * (1.0 + rng.random()), 5.0 + 5.0 * rng.random(),
+                    0.01 + 0.09 * rng.random()]
+        yield (f"planted_illcond{n}", "planted",
+               (np.array(row), np.array(col), np.array(val), n))
+    n, rng = 48, np.random.default_rng(3)
+    row, col, val = [], [], []
+    for i in range(n):
+        row.append(i)
+        col.append(i)
+        val.append(10.0 + 10.0 * rng.random())
+        for j in rng.choice(n, size=3, replace=False):
+            if j != i:
+                row.append(i)
+                col.append(int(j))
+                val.append(float(rng.standard_normal()))
+    yield (f"planted_dominant{n}", "planted",
+           (np.array(row), np.array(col), np.array(val), n))
+
+
+def suitesparse_systems(instances, cache, max_n):
+    from repro.data import suitesparse
+    from repro.data.mtx import read_mtx
+
+    names = ([t.strip() for t in instances.split(",") if t.strip()]
+             if instances else None)
+    for name, path in sorted(
+            suitesparse.fetch_paper_instances(names, cache=cache).items()):
+        coo = read_mtx(path)
+        if coo.nrows > max_n:
+            print(f"# {name}: SKIPPED — n={coo.nrows} > --max-n {max_n} "
+                  f"(dense triangular-sweep backend; raise --max-n at your "
+                  f"own memory's risk)")
+            continue
+        yield name, "suitesparse", (coo.row, coo.col, coo.val, coo.nrows)
+
+
+def run_case(name, source, system, arms=ARMS, rhs_seed=7):
+    from repro.core import ref
+    from repro.solver import solve_linear_system
+
+    row, col, val, n = system
+    rng = np.random.default_rng(rhs_seed)
+    b = rng.standard_normal(n)
+    if np.iscomplexobj(val):
+        b = b + 1j * rng.standard_normal(n)
+    rows = []
+    for arm in arms:
+        if arm == "reference" and not ref.HAVE_SCIPY:
+            print(f"# {name}: reference arm skipped (no scipy)")
+            continue
+        kw = {"pivoting": "none", "lu_mode": "threshold"} if arm == "tpp" \
+            else {"pivoting": arm}
+        t0 = time.perf_counter()
+        rep = solve_linear_system((row, col, val, n), b, **kw)
+        wall = time.perf_counter() - t0
+        s = rep.lu_stats
+        rows.append(SolverRow(
+            case=name, source=source, arm=arm, n=s.n, nnz=s.nnz_in,
+            fill=s.fill_ratio, growth=s.pivot_growth,
+            perturbed=s.perturbed_pivots,
+            diag_min=rep.scaled_diag_min,
+            sweeps=int(np.max(rep.refinement.iterations)),
+            residual=float(np.max(rep.residual)),
+            converged=bool(rep.ok), wall_s=wall))
+        print(f"  {name:<22} {arm:<9} {rep.summary()}")
+    return rows
+
+
+def to_markdown(rows):
+    contrasts = sorted(
+        {r.case for r in rows if r.arm == "none" and not r.converged} &
+        {r.case for r in rows if r.arm == "awpm" and r.converged})
     lines = [
-        f"### {cellname}",
-        f"- **Hypothesis**: {hypothesis}",
-        f"- **Change**: {change}",
-        f"- **Before**: {fmt_terms(b)}",
-        f"- **After**:  {fmt_terms(v)}",
-        f"- **Dominant term ({dom})**: {before:.3f}s -> {after:.3f}s "
-        f"({before / max(after, 1e-12):.2f}x) — **{verdict}**",
-        f"- collective bytes/dev: {b['collectives']['total'] / 2**30:.2f} GiB"
-        f" -> {v['collectives']['total'] / 2**30:.2f} GiB; "
-        f"counts {sum(b['collectives']['counts'].values())} -> "
-        f"{sum(v['collectives']['counts'].values())}",
+        "# Fill / pivot-growth / refinement experiments",
         "",
+        "Generated by `results/fill_experiments.py` (DESIGN.md §12). Arms: "
+        "`awpm` = AWPM static pivoting + MC64 scalings; `reference` = exact "
+        "matching, same scalings; `none` = unpivoted static LU (allowed to "
+        "fail); `tpp` = threshold partial pivoting, no matching. `residual` "
+        "is the true float64 relative residual after mixed-precision "
+        "iterative refinement; `growth` = max|U|/max|A|; `perturbed` = "
+        "GESP-floored pivots.",
+        "",
+        f"**The contrast result:** unpivoted static LU fails on "
+        f"{', '.join(f'`{c}`' for c in contrasts) if contrasts else '(none)'}"
+        f" while AWPM static pivoting converges on every case — the "
+        f"matching replaces numerical pivoting, which is the paper's "
+        f"motivating claim for AWPM inside SuperLU_DIST.",
+        "",
+        "| case | src | arm | n | nnz | fill | growth | perturbed "
+        "| diag_min | sweeps | residual | converged | ms |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
-    return "\n".join(lines)
+    for r in rows:
+        lines.append(
+            f"| {r.case} | {r.source} | {r.arm} | {r.n} | {r.nnz} "
+            f"| {r.fill:.2f} | {r.growth:.3g} | {r.perturbed} "
+            f"| {r.diag_min:.3g} | {r.sweeps} | {r.residual:.3e} "
+            f"| {r.converged} | {r.wall_s * 1e3:.1f} |")
+    return "\n".join(lines) + "\n"
+
+
+def to_bench_rows(rows):
+    out = []
+    for r in rows:
+        out.append({
+            "name": f"solver_{r.case}_{r.arm}",
+            "us_per_call": round(r.wall_s * 1e6, 1),
+            "derived": (
+                f"pivoting={r.arm};n={r.n};nnz={r.nnz};fill={r.fill:.3f};"
+                f"growth={r.growth:.6g};perturbed={r.perturbed};"
+                f"diag_min={r.diag_min:.6g};sweeps={r.sweeps};"
+                f"residual={r.residual:.6e};converged={r.converged}"),
+        })
+    return out
+
+
+def write_outputs(rows, wall_clock_s, quick):
+    import jax
+
+    md = ROOT / "results" / "fill_experiments.md"
+    md.write_text(to_markdown(rows))
+    rec = {
+        "suite": "solver",
+        "ok": True,
+        "wall_clock_s": round(wall_clock_s, 3),
+        "rows": to_bench_rows(rows),
+        "metadata": {
+            "date": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "quick": quick,
+        },
+    }
+    bench = ROOT / "BENCH_solver.json"
+    bench.write_text(json.dumps(rec, indent=1))
+    return md, bench
 
 
 def main():
-    md = (ROOT / "EXPERIMENTS.md").read_text()
+    ap = argparse.ArgumentParser(
+        description="static-pivoting solver experiments")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fixtures only (planted cases skipped)")
+    ap.add_argument("--no-persist", action="store_true",
+                    help="skip writing results/ + BENCH_solver.json")
+    ap.add_argument("--download", action="store_true",
+                    help="OPT-IN network: also solve cached SuiteSparse "
+                         "instances small enough for the dense sweep "
+                         "backend (CI never passes this)")
+    ap.add_argument("--instances", default=None,
+                    help="with --download: comma list of registry names or "
+                         "Group/name specs")
+    ap.add_argument("--cache-dir", default=None,
+                    help="SuiteSparse cache dir override")
+    ap.add_argument("--max-n", type=int, default=4096,
+                    help="skip downloaded instances above this n")
+    args = ap.parse_args()
+    if args.instances and not args.download:
+        raise SystemExit("--instances needs --download (no implicit network)")
 
-    recs = load("single")
-    base = [r for r in recs if "__v_" not in json.dumps(r.get("variants", []))
-            or not r.get("variants")]
-    md = md.replace("<!-- ROOFLINE_TABLE -->",
-                    roofline_table([r for r in recs if not r.get("variants")]))
+    systems = list(fixture_systems())
+    if not args.quick:
+        systems += list(planted_systems())
+    if args.download:
+        systems += list(suitesparse_systems(args.instances, args.cache_dir,
+                                            args.max_n))
+    t0 = time.perf_counter()
+    rows = []
+    for name, source, system in systems:
+        rows += run_case(name, source, system)
+    wall = time.perf_counter() - t0
 
-    perf = []
-    perf.append(perf_pair(
-        "awpm-matching__match_4m__single",
-        "awpm-matching__match_4m__single__v_packed_a2a",
-        "Iteration M1+M2 — awpm-matching · match_4m (paper-representative)",
-        "the A/B exchange pays 4 collective launches per routing stage "
-        "(3 payload arrays + validity); packing into one int32-bitcast "
-        "all_to_all with sentinel-derived validity cuts launches 4->1 with "
-        "the same bytes; search depth ceil(log2(cap)) instead of 32 cuts "
-        "join gather traffic ~40%",
-        "core/dist.py a2a_bucketed(packed=True) + adaptive lex-search depth"))
-    perf.append(perf_pair(
-        "qwen1.5-110b__train_4k__single",
-        "qwen1.5-110b__train_4k__single__v_fsdp_gather",
-        "Iteration L1 — qwen1.5-110b · train_4k (largest dense LM)",
-        "with embed FSDP-sharded over 'data', GSPMD all-reduces ACTIVATIONS "
-        "([65k tok/dev, 3072] f32 per matmul) when contracting the sharded "
-        "dim; napkin: gathering bf16 WEIGHTS instead costs ~340MB/layer/dev "
-        "vs ~multi-GB activation reductions -> expect large collective drop",
-        "explicit bf16 weight all-gather at use (w_fsdp constraint)"))
-    perf.append(perf_pair(
-        "deepseek-moe-16b__train_4k__single",
-        "deepseek-moe-16b__train_4k__single__v_moe_ep",
-        "Iteration E1 — deepseek-moe-16b · train_4k (most collective-bound LM)",
-        "global capacity-based dispatch scatters T=1M tokens into a single "
-        "[64, 123k, 2048] buffer across the mesh (giant cross-device "
-        "scatter + gathers); grouped dispatch (2048-token data-local groups) "
-        "+ EP over 'model' (64/16) turns routing into shard-local scatters "
-        "+ the canonical token<->expert all_to_all",
-        "moe_apply grouped dispatch + experts sharded over 'model'"))
-    perf.append(perf_pair(
-        "deepseek-moe-16b__train_4k__single",
-        "deepseek-moe-16b__train_4k__single__v_moe_ep_fsdp_gather",
-        "Iteration E2 — deepseek-moe-16b · train_4k (E1 + L1 composed)",
-        "E1 leaves the dense-path activation all-reduces of L1 in place; "
-        "composing both should stack",
-        "moe_ep + fsdp_gather variants together"))
-    perf.append(perf_pair(
-        "equiformer-v2__ogb_products__single",
-        "equiformer-v2__ogb_products__single__v_escn_sub",
-        "Iteration Q1 — equiformer-v2 · ogb_products (worst roofline fraction)",
-        "edge messages carry all 49 irrep components but only |m|<=2 ones "
-        "(29/49) interact under the eSCN restriction; carrying the subspace "
-        "only shrinks every gather/message/aggregate by 1.69x",
-        "escn_subspace=True (state restricted to |m| <= m_max components)"))
-    perf.append(perf_pair(
-        "deepseek-moe-16b__train_4k__single__v_moe_ep",
-        "deepseek-moe-16b__train_4k__single__v_moe_ep:8192",
-        "Iteration E3 — deepseek-moe-16b · train_4k (new dominant term: memory)",
-        "per-group expert GEMMs at gb=2048 re-read expert weights per group; "
-        "4x larger groups should cut weight re-reads 4x",
-        "dispatch group size 2048 -> 8192")
-        + "\n> verdict detail: HLO bytes-accessed counts each einsum's "
-          "operands once regardless of the group count, so the metric is "
-          "blind to this effect — **not measurable in this environment** "
-          "(<1% change); on TPU the win would appear in wall-clock. "
-          "Counts toward the <5% stopping rule.\n")
-    perf.append(perf_pair(
-        "equiformer-v2__ogb_products__single__v_escn_sub",
-        "equiformer-v2__ogb_products__single__v_escn_sub_gnn_bf16",
-        "Iteration Q2 — equiformer-v2 · ogb_products (sub-space + bf16 messages)",
-        "node states/messages in bf16 halve the dominant all-gathers of x "
-        "[2.45M, 29, 128] (33.9 GiB -> 17 GiB each)",
-        "gnn_bf16 variant (bf16 features end-to-end; verified numerically "
-        "equivalent to f32 within 0.6% rel err)")
-        + "\n> verdict detail: dtype propagation confirmed locally, but "
-          "XLA:CPU upcasts bf16 arithmetic to f32 (convert fusions feed the "
-          "all-gathers), so the dry-run metric shows no change — an "
-          "environment artifact; a TPU compile gathers native bf16. Counts "
-          "toward the <5% stopping rule on this backend.\n")
-    md = md.replace("<!-- PERF_ITERATIONS -->", "\n".join(perf))
-
-    # dry-run notes: compile time stats
-    times = [r.get("compile_s", 0) for r in recs if r.get("ok")]
-    multi = load("multi")
-    ok_m = sum(1 for r in multi if r.get("ok"))
-    md = md.replace(
-        "<!-- DRYRUN_NOTES -->",
-        f"Compile times (single-pod, 1 CPU core): median "
-        f"{sorted(times)[len(times)//2]:.0f}s, max {max(times):.0f}s. "
-        f"Multi-pod: {ok_m}/{len(multi)} OK — the 'pod' axis shards "
-        f"(EP for MoE where divisible, batch/sequence elsewhere).")
-
-    (ROOT / "EXPERIMENTS.md").write_text(md)
-    print("filled EXPERIMENTS.md")
+    n_awpm = sum(1 for r in rows if r.arm == "awpm")
+    n_conv = sum(1 for r in rows if r.arm == "awpm" and r.converged)
+    contrasts = sorted(
+        {r.case for r in rows if r.arm == "none" and not r.converged} &
+        {r.case for r in rows if r.arm == "awpm" and r.converged})
+    print(f"# {len(rows)} rows in {wall:.1f}s: awpm converged {n_conv}/"
+          f"{n_awpm}, none-fails/awpm-converges contrast on "
+          f"{contrasts or 'NO CASE (gate will fail)'}")
+    if not args.no_persist:
+        md, bench = write_outputs(rows, wall, args.quick)
+        print(f"# wrote {md.relative_to(ROOT)} and {bench.name} "
+              f"({len(rows)} rows)")
+    if n_conv < n_awpm:
+        raise SystemExit("awpm arm failed to converge — see table above")
 
 
 if __name__ == "__main__":

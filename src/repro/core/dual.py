@@ -85,6 +85,18 @@ class DualCertificate:
         """upper_bound - weight: how far from certified-optimal."""
         return self.upper_bound - self.weight
 
+    def potentials(self) -> tuple[np.ndarray, np.ndarray]:
+        """The feasible dual vectors ``(u, v)`` — row potentials first —
+        as float64 copies (mutating the return never corrupts the
+        certificate). This is the public accessor downstream consumers
+        use (``repro.solver.pivoting`` recovers the MC64-style row/column
+        scalings from these; ``experiments`` reads them for reporting):
+        every potential pair satisfies ``u_i + v_j >= w_ij`` on every
+        edge, with equality on matched edges when ``tight``.
+        """
+        return np.array(self.u, np.float64, copy=True), \
+            np.array(self.v, np.float64, copy=True)
+
 
 def dual_certificate(row, col, val, n: int, mate_row, *,
                      max_rounds: int | None = None,

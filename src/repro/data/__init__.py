@@ -1,7 +1,8 @@
 """Data pipelines: synthetic generators (graphs/matrices/tokens), real-matrix
-ingestion (``repro.data.mtx``), and the paper's weight metrics
-(``repro.data.weight_transforms``). The matching-side facade is
-``repro.data.matrices``."""
-from repro.data import matrices, mtx, weight_transforms
+ingestion (``repro.data.mtx``), the paper's weight metrics
+(``repro.data.weight_transforms``), and the opt-in SuiteSparse downloader
+(``repro.data.suitesparse`` — never touched by CI). The matching-side
+facade is ``repro.data.matrices``."""
+from repro.data import matrices, mtx, suitesparse, weight_transforms
 
-__all__ = ["matrices", "mtx", "weight_transforms"]
+__all__ = ["matrices", "mtx", "suitesparse", "weight_transforms"]

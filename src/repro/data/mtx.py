@@ -7,13 +7,18 @@ no scipy.io dependency, so the data layer works wherever the engine does.
 
 Supported dialect (the one every SuiteSparse sparse matrix uses):
 
-  %%MatrixMarket matrix coordinate {real|integer|pattern}
-                 {general|symmetric|skew-symmetric}
+  %%MatrixMarket matrix coordinate {real|integer|pattern|complex}
+                 {general|symmetric|skew-symmetric|hermitian}
 
 - ``coordinate`` only (the dense ``array`` format is rejected — a dense
   dump is not a sparse-solver workload).
-- ``complex``/``hermitian`` are rejected with a clear error (matching
-  weights are real; take magnitudes upstream if you need complex input).
+- ``complex`` entries carry four tokens (i j re im) and parse into a
+  complex128 value array; matching weights stay real via the magnitude
+  pre-transform in :func:`load_problem` (``w = |a_ij|`` feeds the weight
+  transform) while the complex values ride along for the solver path
+  (``repro.solver`` factorizes them as-is). ``hermitian`` storage
+  requires the complex field, must keep a real diagonal, and expands by
+  mirroring with the conjugate.
 - symmetric storage holds one triangle; :func:`read_mtx` expands it to
   general by mirroring off-diagonal entries (skew-symmetric mirrors with
   negated value and must not carry diagonal entries).
@@ -33,8 +38,8 @@ import pathlib
 import numpy as np
 
 BANNER = "%%MatrixMarket"
-FIELDS = ("real", "integer", "pattern")
-SYMMETRIES = ("general", "symmetric", "skew-symmetric")
+FIELDS = ("real", "integer", "pattern", "complex")
+SYMMETRIES = ("general", "symmetric", "skew-symmetric", "hermitian")
 
 __all__ = [
     "FIELDS",
@@ -66,7 +71,8 @@ class CooMatrix:
     ncols: int
     row: np.ndarray  # [nnz] int64, 0-based
     col: np.ndarray  # [nnz] int64, 0-based
-    val: np.ndarray  # [nnz] float64 (pattern entries read as 1.0)
+    val: np.ndarray  # [nnz] float64 (complex128 for the 'complex' field;
+    # pattern entries read as 1.0)
     field: str
     symmetry: str
     expanded: bool
@@ -99,11 +105,17 @@ def _parse_header(path, line: str) -> tuple[str, str]:
                             f"'array' dumps are not a sparse workload)")
     if field not in FIELDS:
         raise _err(path, 1, f"unsupported field {field!r}: expected one of "
-                            f"{FIELDS} (complex matrices: take magnitudes "
-                            f"upstream — matching weights are real)")
+                            f"{FIELDS}")
     if symmetry not in SYMMETRIES:
         raise _err(path, 1, f"unsupported symmetry {symmetry!r}: expected "
                             f"one of {SYMMETRIES}")
+    if symmetry == "hermitian" and field != "complex":
+        raise _err(path, 1, f"'hermitian' symmetry requires the 'complex' "
+                            f"field (got {field!r}); real hermitian IS "
+                            f"symmetric — declare it so")
+    if field == "pattern" and symmetry == "skew-symmetric":
+        raise _err(path, 1, "'pattern' entries carry no sign, so "
+                            "'skew-symmetric' storage is meaningless")
     return field, symmetry
 
 
@@ -117,7 +129,7 @@ def read_mtx(path, expand_symmetry: bool = True) -> CooMatrix:
         raise _err(path, 1, "empty file (missing Matrix Market banner)")
     field, symmetry = _parse_header(path, lines[0])
 
-    want = 3 if field != "pattern" else 2
+    want = {"pattern": 2, "complex": 4}.get(field, 3)
     size = None
     rows, cols, vals = [], [], []
     for lineno, line in enumerate(lines[1:], start=2):
@@ -144,18 +156,25 @@ def read_mtx(path, expand_symmetry: bool = True) -> CooMatrix:
                                      f"{field!r} entry, got {stripped!r}")
         try:
             i, j = int(tokens[0]), int(tokens[1])
-            v = 1.0 if field == "pattern" else (
-                float(int(tokens[2])) if field == "integer"
-                else float(tokens[2]))
+            if field == "pattern":
+                v = 1.0
+            elif field == "integer":
+                v = float(int(tokens[2]))
+            elif field == "complex":
+                v = complex(float(tokens[2]), float(tokens[3]))
+            else:
+                v = float(tokens[2])
         except ValueError:
             raise _err(path, lineno, f"bad {field!r} entry {stripped!r}") from None
-        if v != v or v in (float("inf"), float("-inf")):
+        parts = (v.real, v.imag) if field == "complex" else (v,)
+        if any(p != p or p in (float("inf"), float("-inf")) for p in parts):
             # python's float() happily parses 'nan'/'inf'; a non-finite
             # weight poisons every downstream comparison (preflight would
             # flag it later, but the file position is only known here)
-            raise _err(path, lineno, f"non-finite value {tokens[2]!r} in "
-                                     f"entry {stripped!r}: matching weights "
-                                     f"must be finite")
+            bad = next(t for p, t in zip(parts, tokens[2:])
+                       if p != p or p in (float("inf"), float("-inf")))
+            raise _err(path, lineno, f"non-finite value {bad!r}: matching "
+                                     f"weights must be finite")
         if not (1 <= i <= size[0] and 1 <= j <= size[1]):
             raise _err(path, lineno, f"index ({i}, {j}) outside the declared "
                                      f"{size[0]} x {size[1]} shape (Matrix "
@@ -171,7 +190,8 @@ def read_mtx(path, expand_symmetry: bool = True) -> CooMatrix:
 
     row = np.asarray(rows, np.int64)
     col = np.asarray(cols, np.int64)
-    val = np.asarray(vals, np.float64)
+    val = np.asarray(vals,
+                     np.complex128 if field == "complex" else np.float64)
     expanded = False
     if expand_symmetry and symmetry != "general":
         if size[0] != size[1]:
@@ -198,6 +218,18 @@ def read_mtx(path, expand_symmetry: bool = True) -> CooMatrix:
                                     f"{int(col[k]) + 1}) — the diagonal is "
                                     f"implicitly zero")
             mirror_val = -val[off]
+        elif symmetry == "hermitian":
+            # A = A^H forces a real diagonal; a complex one is a malformed
+            # file, not a representable matrix
+            bad_diag = (~off) & (val.imag != 0.0)
+            if bad_diag.any():
+                k = int(np.nonzero(bad_diag)[0][0])
+                raise _err(path, 1, f"hermitian diagonal entry "
+                                    f"({int(row[k]) + 1}, {int(col[k]) + 1}) "
+                                    f"has a nonzero imaginary part "
+                                    f"({val[k].imag!r}) — A = A^H forces a "
+                                    f"real diagonal")
+            mirror_val = np.conj(val[off])
         else:
             mirror_val = val[off]
         row, col = (np.concatenate([row, col[off]]),
@@ -226,13 +258,18 @@ def write_mtx(path, row, col, val=None, shape=None, field: str | None = None,
     row = np.asarray(row, np.int64)
     col = np.asarray(col, np.int64)
     if field is None:
-        field = "pattern" if val is None else "real"
+        field = "pattern" if val is None else (
+            "complex" if np.iscomplexobj(np.asarray(val)) else "real")
     if field not in FIELDS:
         raise MatrixMarketError(f"unsupported field {field!r}: expected one "
                                 f"of {FIELDS}")
     if symmetry not in SYMMETRIES:
         raise MatrixMarketError(f"unsupported symmetry {symmetry!r}: "
                                 f"expected one of {SYMMETRIES}")
+    if symmetry == "hermitian" and field != "complex":
+        raise MatrixMarketError(
+            f"'hermitian' symmetry requires the 'complex' field (got "
+            f"{field!r}) — read_mtx would reject the file")
     if field != "pattern":
         if val is None:
             raise MatrixMarketError(f"field {field!r} needs values")
@@ -247,6 +284,14 @@ def write_mtx(path, row, col, val=None, shape=None, field: str | None = None,
                 f"would reject the file")
         if field == "integer" and not np.all(val == np.trunc(val)):
             raise MatrixMarketError("field 'integer' needs integral values")
+        if symmetry == "hermitian":
+            bad = (row == col) & (np.asarray(val).imag != 0.0)
+            if bad.any():
+                k = int(np.nonzero(bad)[0][0])
+                raise MatrixMarketError(
+                    f"hermitian diagonal entry ({int(row[k]) + 1}, "
+                    f"{int(col[k]) + 1}) has a nonzero imaginary part — "
+                    f"read_mtx would reject the file")
     if shape is None:
         shape = (int(row.max()) + 1 if row.size else 0,
                  int(col.max()) + 1 if col.size else 0)
@@ -268,6 +313,10 @@ def write_mtx(path, row, col, val=None, shape=None, field: str | None = None,
     elif field == "integer":
         out.extend(f"{i + 1} {j + 1} {int(v)}"
                    for i, j, v in zip(row, col, val))
+    elif field == "complex":
+        out.extend(
+            f"{i + 1} {j + 1} {_fmt_value(v.real)} {_fmt_value(v.imag)}"
+            for i, j, v in zip(row, col, val))
     else:
         out.extend(f"{i + 1} {j + 1} {_fmt_value(v)}"
                    for i, j, v in zip(row, col, val))
@@ -278,16 +327,21 @@ def load_problem(path, transform="abs", capacity: int | None = None,
                  drop_zeros: bool = True):
     """Read ``path`` and build a :class:`repro.core.MatchingProblem`.
 
-    Pipeline: parse (+ symmetric expansion) -> assemble duplicates by
-    summation -> drop explicit / cancelled zeros (MC64 treats them as
-    non-edges, and the log-scaled metric is undefined on them) -> apply the
-    weight ``transform`` (a name from
+    Pipeline: parse (+ symmetric/hermitian expansion) -> assemble
+    duplicates by summation -> drop explicit / cancelled zeros (MC64
+    treats them as non-edges, and the log-scaled metric is undefined on
+    them) -> magnitude pre-transform for complex fields (matching weights
+    are ``|a_ij|``; the complex values stay on the returned ``coo`` for
+    the solver path) -> apply the weight ``transform`` (a name from
     :data:`repro.data.weight_transforms.TRANSFORMS`, a callable
     ``(row, col, val, n) -> val``, or None for raw values) -> pad/sort via
     ``MatchingProblem.from_coo``.
 
     Returns ``(problem, coo)`` — the problem plus the parsed
-    :class:`CooMatrix` (pre-transform values, for reporting).
+    :class:`CooMatrix`. For real fields ``coo`` holds the file's values
+    verbatim (pre-transform); for complex fields ``coo.val`` is
+    complex128 after assembly, and only the matching-side weights are
+    collapsed to magnitudes.
     """
     from repro.core.api import MatchingProblem
     from repro.data.weight_transforms import get_transform
@@ -303,7 +357,16 @@ def load_problem(path, transform="abs", capacity: int | None = None,
     if drop_zeros:
         keep = val != 0.0
         row, col, val = row[keep], col[keep], val[keep]
+    if np.iscomplexobj(val):
+        # magnitude pre-transform: the matching engine needs real weights,
+        # the solver path keeps the complex values (returned on coo after
+        # assembly so downstream consumers see what load_problem matched on)
+        coo = dataclasses.replace(coo, row=row, col=col, val=val)
+        weights = np.abs(val)
+    else:
+        weights = val
     if transform is not None:
-        val = get_transform(transform)(row, col, val, n)
-    problem = MatchingProblem.from_coo(row, col, val, n, capacity=capacity)
+        weights = get_transform(transform)(row, col, weights, n)
+    problem = MatchingProblem.from_coo(row, col, weights, n,
+                                       capacity=capacity)
     return problem, coo

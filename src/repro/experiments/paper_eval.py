@@ -50,6 +50,8 @@ FIXTURE_TRANSFORMS = {
     "bands6_sym": "abs",
     "mesh5_pat": None,
     "count4_int": "abs",
+    "illcond9": "log2_scaled_nonneg",
+    "zcoil7": "log2_scaled_nonneg",
 }
 
 # engines swept: local backends + device grids (grid rows use the Matcher
@@ -108,6 +110,23 @@ def fixture_cases(fixture_dir=None) -> list[EvalCase]:
             transform=transform or "pattern", nnz=coo.nnz))
     if not cases:
         raise FileNotFoundError(f"no .mtx fixtures under {fixture_dir}")
+    return cases
+
+
+def extra_mtx_cases(paths) -> list[EvalCase]:
+    """Cases for out-of-tree ``.mtx`` files (the ``--download``-fetched
+    SuiteSparse instances). Unknown stems default to the paper metric
+    (``log2_scaled_nonneg``) — these ARE the paper's instances."""
+    from repro.data.mtx import load_problem
+
+    cases = []
+    for p in paths:
+        path = pathlib.Path(p)
+        transform = FIXTURE_TRANSFORMS.get(path.stem, "log2_scaled_nonneg")
+        problem, coo = load_problem(path, transform=transform)
+        cases.append(EvalCase(
+            name=path.stem, problem=problem, source="suitesparse",
+            transform=transform or "pattern", nnz=coo.nnz))
     return cases
 
 
@@ -233,6 +252,8 @@ def _cases_from_spec(spec: dict) -> list[EvalCase]:
     cases = []
     if spec.get("fixtures", True):
         cases += fixture_cases(spec.get("fixture_dir"))
+    if spec.get("extra_mtx"):
+        cases += extra_mtx_cases(spec["extra_mtx"])
     if spec.get("synthetic_count", 0):
         cases += synthetic_cases(spec["synthetic_count"],
                                  spec.get("synthetic_n", 96),

@@ -1,0 +1,31 @@
+"""``repro.solver`` — the end-to-end static-pivoting sparse direct solver
+(DESIGN.md §12): AWPM matching as pivot order, MC64-style scalings from
+dual potentials, dependency-light sparse LU (static or threshold
+pivoting, GESP perturbation), and mixed-precision iterative refinement.
+Public entry point: :func:`solve_linear_system`.
+"""
+from repro.solver.lu import CsrMatrix, LUFactorization, LUStats, sparse_lu
+from repro.solver.pipeline import (PIVOTING_MODES, SolveReport,
+                                   solve_linear_system)
+from repro.solver.pivoting import (ScaledPivoting, awpm_pivoting,
+                                   from_matching, identity_pivoting,
+                                   reference_pivoting)
+from repro.solver.refine import RefineResult, lu_solve_once, refine
+
+__all__ = [
+    "CsrMatrix",
+    "LUFactorization",
+    "LUStats",
+    "PIVOTING_MODES",
+    "RefineResult",
+    "ScaledPivoting",
+    "SolveReport",
+    "awpm_pivoting",
+    "from_matching",
+    "identity_pivoting",
+    "lu_solve_once",
+    "refine",
+    "reference_pivoting",
+    "solve_linear_system",
+    "sparse_lu",
+]

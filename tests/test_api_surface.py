@@ -1,13 +1,15 @@
-"""Public-API snapshot: the exported surface of ``repro.core`` is a
-contract — additions are deliberate (update the snapshot in the same PR
-that extends the facade), removals/renames are breaking and must not
-happen silently. Also guards the facade acceptance rule: no consumer
-(pivot, moe, examples, benchmarks) may call a legacy matching entry point
-directly anymore."""
+"""Public-API snapshot: the exported surfaces of ``repro.core``,
+``repro.data``, and ``repro.solver`` are contracts — additions are
+deliberate (update the snapshot in the same PR that extends the facade),
+removals/renames are breaking and must not happen silently. Also guards
+the facade acceptance rule: no consumer (pivot, moe, examples,
+benchmarks) may call a legacy matching entry point directly anymore."""
 import pathlib
 import re
 
 import repro.core as core
+import repro.data as data
+import repro.solver as solver_mod
 
 REPO = pathlib.Path(__file__).resolve().parents[1]
 
@@ -58,6 +60,35 @@ EXPECTED_API_EXPORTS = [
 ]
 
 
+# the ingestion facade: suitesparse (opt-in network) rides next to the
+# fixture loaders, never silently replacing them
+EXPECTED_DATA_EXPORTS = [
+    "matrices",
+    "mtx",
+    "suitesparse",
+    "weight_transforms",
+]
+
+# the solver subsystem (DESIGN.md §12): matching-as-pivoting end to end
+EXPECTED_SOLVER_EXPORTS = [
+    "CsrMatrix",
+    "LUFactorization",
+    "LUStats",
+    "PIVOTING_MODES",
+    "RefineResult",
+    "ScaledPivoting",
+    "SolveReport",
+    "awpm_pivoting",
+    "from_matching",
+    "identity_pivoting",
+    "lu_solve_once",
+    "reference_pivoting",
+    "refine",
+    "solve_linear_system",
+    "sparse_lu",
+]
+
+
 def test_core_export_snapshot():
     assert sorted(core.__all__) == EXPECTED_EXPORTS
     for name in core.__all__:
@@ -72,6 +103,20 @@ def test_api_export_snapshot():
     assert core.solve is core.api.solve
     assert core.MatchingProblem is core.api.MatchingProblem
     assert core.MIN_GAIN == core.single.MIN_GAIN == core.ref.MIN_GAIN
+
+
+def test_data_export_snapshot():
+    assert sorted(data.__all__) == EXPECTED_DATA_EXPORTS
+    for name in data.__all__:
+        assert hasattr(data, name)
+
+
+def test_solver_export_snapshot():
+    assert sorted(solver_mod.__all__) == EXPECTED_SOLVER_EXPORTS
+    for name in solver_mod.__all__:
+        assert hasattr(solver_mod, name)
+    # the certificate accessor the solver's scaling recovery depends on
+    assert callable(core.DualCertificate.potentials)
 
 
 # --------------------------------------------------------------------------

@@ -112,6 +112,42 @@ def test_integer_field_exact():
     assert -3.0 in m.val.tolist()
 
 
+def test_complex_field_reads():
+    m = read_mtx(DATA / "zcoil7.mtx")
+    assert m.field == "complex"
+    assert m.val.dtype == np.complex128
+    assert (m.val.imag != 0).any()
+
+
+def test_hermitian_expansion(tmp_path):
+    out = tmp_path / "herm.mtx"
+    write_mtx(out, [0, 1, 2], [0, 0, 1], [2.0, 1.0 - 3.0j, 0.5j],
+              shape=(3, 3), symmetry="hermitian")
+    m = read_mtx(out)
+    d = {(int(i), int(j)): v for i, j, v in zip(m.row, m.col, m.val)}
+    # mirrors are CONJUGATED (hermitian), not copied (symmetric)
+    assert d[(0, 1)] == 1.0 + 3.0j and d[(1, 0)] == 1.0 - 3.0j
+    assert d[(1, 2)] == -0.5j
+    assert d[(0, 0)] == 2.0  # real diagonal stays on the diagonal once
+
+
+def test_hermitian_nonreal_diagonal_rejected(tmp_path):
+    with pytest.raises(MatrixMarketError, match="diagonal"):
+        write_mtx(tmp_path / "w.mtx", [0], [0], [1.0 + 1.0j],
+                  shape=(2, 2), symmetry="hermitian")
+
+
+def test_load_problem_complex_magnitude():
+    problem, coo = load_problem(DATA / "zcoil7.mtx", transform="abs")
+    val = np.asarray(problem.val)
+    row = np.asarray(problem.row)
+    m = row < problem.n
+    # matching weights are |a_ij| — real, positive, magnitude order kept
+    assert not np.iscomplexobj(val)
+    assert (val[m] > 0).all()
+    assert val[m].max() == pytest.approx(np.abs(coo.val).max(), rel=1e-6)
+
+
 # --------------------------------------------------------------------------
 # malformed input: every error names the file and line
 # --------------------------------------------------------------------------
@@ -122,10 +158,14 @@ def test_integer_field_exact():
     ("%%NotMatrixMarket matrix coordinate real general\n1 1 0\n", "banner"),
     ("%%MatrixMarket matrix array real general\n1 1\n0.5\n", "coordinate"),
     ("%%MatrixMarket tensor coordinate real general\n1 1 0\n", "object"),
-    ("%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 2.0 0.0\n",
-     "field 'complex'|unsupported field"),
+    ("%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 2.0\n",
+     "bad 'complex' entry|expected 4 tokens"),
+    ("%%MatrixMarket matrix coordinate complex general\n1 1 1\n1 1 2.0 nan\n",
+     "non-finite"),
     ("%%MatrixMarket matrix coordinate real hermitian\n1 1 1\n1 1 2.0\n",
-     "symmetry"),
+     "hermitian.*complex|complex"),
+    ("%%MatrixMarket matrix coordinate complex hermitian\n2 2 1\n"
+     "1 1 2.0 1.0\n", "diagonal"),
     ("%%MatrixMarket matrix coordinate real general\nnot a size line\n",
      "size line"),
     ("%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n",
